@@ -1,0 +1,56 @@
+"""Paper Figure 11 / §4.6: overall data-transfer throughput model.
+
+T_overall = ((BW * CR)^-1 + T_compr^-1)^-1 with measured CRs and measured
+(CPU-proxy, relative) compression throughputs. Evaluated at the paper's two
+interconnect operating points: 32 GB/s (dedicated PCIe4 x16) and 11.4 GB/s
+(4-GPU contended), plus a 3 GB/s DCN-like point for the cross-pod story.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, fz
+from repro.data import make_field
+from .common import timeit
+
+LINKS_GBPS = (32.0, 11.4, 3.0)
+
+
+def overall(bw_gbps, cr, compr_gbps):
+    return 1.0 / (1.0 / (bw_gbps * cr) + 1.0 / compr_gbps)
+
+
+def run(shape=(128, 128, 64)):
+    f = jnp.asarray(make_field("smooth", shape, seed=9))
+    nbytes = f.size * 4
+    rows = []
+    # FZ at a mid bound
+    cfg = fz.FZConfig(eb=1e-3, exact_outliers=False)
+    comp = jax.jit(lambda x: fz.compress(x, cfg))
+    cr_fz = float(comp(f).compression_ratio())
+    thr_fz = nbytes / timeit(comp, f) / 1e9
+    # cuSZx-like: faster kernel, lower ratio
+    ebj = jnp.float32(1e-3 * float(jnp.max(f) - jnp.min(f)))
+    cx = jax.jit(lambda x: baselines.cuszx_like(x, ebj))
+    _, bx = cx(f)
+    cr_x = nbytes / float(bx)
+    thr_x = nbytes / timeit(cx, f) / 1e9
+    for bw in LINKS_GBPS:
+        rows.append(("fz", bw, cr_fz, thr_fz, overall(bw, cr_fz, thr_fz)))
+        rows.append(("cuszx-like", bw, cr_x, thr_x, overall(bw, cr_x, thr_x)))
+        rows.append(("no-compression", bw, 1.0, float("inf"), bw))
+    return rows
+
+
+def main():
+    rows = run()
+    print("compressor,link_GBps,CR,compr_GBps(proxy),overall_GBps(model)")
+    for name, bw, cr, thr, ov in rows:
+        t = "inf" if thr == float("inf") else f"{thr:.2f}"
+        print(f"{name},{bw},{cr:.2f},{t},{ov:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

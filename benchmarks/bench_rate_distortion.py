@@ -1,0 +1,62 @@
+"""Paper Figure 7: rate-distortion (bitrate vs PSNR) across compressors.
+
+Synthetic SDRBench-proxy fields (data/fields.py); five relative error bounds;
+FZ vs cuSZ-like / cuSZx-like / cuZFP-like. cuZFP has no error-bounded mode,
+so (faithful to the paper's method) its point is chosen at the bitrate whose
+PSNR is closest to FZ's.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, fz, metrics
+from repro.data import FIELD_KINDS, make_field
+from .common import PAPER_EBS
+
+
+def run(shape=(64, 64, 64), kinds=FIELD_KINDS, ebs=PAPER_EBS):
+    rows = []
+    for kind in kinds:
+        f = jnp.asarray(make_field(kind, shape, seed=11))
+        raw = f.size * 4
+        for eb in ebs:
+            cfg = fz.FZConfig(eb=eb)
+            rec, c = fz.roundtrip(f, cfg)
+            eb_abs = float(c.eb_abs)
+            psnr_fz = float(metrics.psnr(f, rec))
+            br_fz = 32.0 * float(c.used_bytes()) / raw
+            cz = baselines.cusz_like(np.asarray(f), eb_abs)
+            psnr_cz = float(metrics.psnr(f, jnp.asarray(cz.reconstruction)))
+            br_cz = 32.0 * cz.compressed_bytes / raw
+            rx, bx = baselines.cuszx_like(f, jnp.float32(eb_abs))
+            psnr_x = float(metrics.psnr(f, rx))
+            br_x = 32.0 * float(bx) / raw
+            # cuZFP: search the rate whose PSNR best matches FZ's
+            best = None
+            for rate in (2, 4, 6, 8, 10, 12, 14, 16):
+                rz, bz = baselines.cuzfp_like(f, rate)
+                p = float(metrics.psnr(f, rz))
+                if best is None or abs(p - psnr_fz) < abs(best[0] - psnr_fz):
+                    best = (p, 32.0 * float(bz) / raw, rate)
+            rows.append(dict(kind=kind, eb=eb,
+                             fz_bitrate=br_fz, fz_psnr=psnr_fz,
+                             cusz_bitrate=br_cz, cusz_psnr=psnr_cz,
+                             cuszx_bitrate=br_x, cuszx_psnr=psnr_x,
+                             cuzfp_bitrate=best[1], cuzfp_psnr=best[0]))
+    return rows
+
+
+def main():
+    rows = run()
+    print("kind,eb,fz_br,fz_psnr,cusz_br,cusz_psnr,cuszx_br,cuszx_psnr,cuzfp_br,cuzfp_psnr")
+    for r in rows:
+        print(f"{r['kind']},{r['eb']:.0e},{r['fz_bitrate']:.2f},{r['fz_psnr']:.1f},"
+              f"{r['cusz_bitrate']:.2f},{r['cusz_psnr']:.1f},"
+              f"{r['cuszx_bitrate']:.2f},{r['cuszx_psnr']:.1f},"
+              f"{r['cuzfp_bitrate']:.2f},{r['cuzfp_psnr']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

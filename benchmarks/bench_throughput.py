@@ -1,0 +1,50 @@
+"""Paper Figures 8/9: end-to-end compression throughput across error bounds.
+
+CPU-proxy numbers (relative across error bounds and vs. baselines-in-repo;
+the absolute GB/s claims in the paper require the target accelerator).
+Includes compression AND the symmetric decompression path (§4.4 note).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, fz
+from repro.data import make_field
+from .common import PAPER_EBS, gbps, timeit
+
+
+def run(shape=(128, 128, 64), kinds=("smooth", "turbulent")):
+    rows = []
+    for kind in kinds:
+        f = jnp.asarray(make_field(kind, shape, seed=5))
+        nbytes = f.size * 4
+        for eb in PAPER_EBS:
+            cfg = fz.FZConfig(eb=eb, exact_outliers=False)
+            comp = jax.jit(lambda x: fz.compress(x, cfg))
+            c = comp(f)
+            dec = jax.jit(lambda cc: fz.decompress(cc, cfg))
+            t_c = timeit(comp, f)
+            t_d = timeit(dec, c)
+            cr = float(c.compression_ratio())
+            rows.append((f"fz-compress[{kind},{eb:.0e}]", t_c, nbytes, cr))
+            rows.append((f"fz-decompress[{kind},{eb:.0e}]", t_d, nbytes, cr))
+        # cuSZx-like comparison point (the paper's fastest baseline)
+        ebj = jnp.float32(1e-3 * float(jnp.max(f) - jnp.min(f)))
+        cx = jax.jit(lambda x: baselines.cuszx_like(x, ebj))
+        t_x = timeit(cx, f)
+        _, bx = cx(f)
+        rows.append((f"cuszx-like[{kind},1e-3]", t_x, nbytes, nbytes / float(bx)))
+    return rows
+
+
+def main():
+    rows = run()
+    print("pipeline,us_per_call,cpu_proxy_GBps,compression_ratio")
+    for name, secs, nbytes, cr in rows:
+        print(f"{name},{secs * 1e6:.0f},{gbps(nbytes, secs):.3f},{cr:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

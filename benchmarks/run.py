@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all, reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --only rate_distortion
+
+Sections map to the paper:
+    rate_distortion  -> Fig. 7   (bitrate vs PSNR, 4 compressors)
+    throughput       -> Fig. 8/9 (compression/decompression, CPU-proxy)
+    breakdown        -> Fig. 10  (per-kernel optimization effects)
+    overall          -> Fig. 11  (overall data-transfer throughput model)
+    integrations     -> §2.4 use cases in the framework (grads/KV/ckpt)
+    roofline         -> §Roofline table from the dry-run JSONs
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ("rate_distortion", "throughput", "breakdown", "overall",
+            "integrations", "roofline")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", choices=SECTIONS, default=None)
+    args = p.parse_args()
+    todo = [args.only] if args.only else list(SECTIONS)
+    for name in todo:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name},FAILED,{e!r}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serving with FZ-compressed KV-cache parking (paper §2.4 in-memory use case).
+
+Batched prefill -> greedy decode; between steps the KV cache is parked
+(compressed in device memory) and resumed, modeling preemption/swap in a
+production serving stack.
+
+    PYTHONPATH=src python examples/serve_compressed_kv.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import zoo
+from repro.serve import Engine, KVCompressionConfig
+from repro.serve.engine import cache_bytes, compressed_cache_bytes
+
+
+def main():
+    cfg = dataclasses.replace(
+        configs.get("glm4-9b"),
+        arch_id="glm4-mini", n_layers=6, d_model=512, n_heads=8, n_kv_heads=2,
+        d_ff=1408, vocab=8192, head_dim=64)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    print(f"serving {cfg.arch_id}: {model.param_count() / 1e6:.1f}M params")
+
+    rng = np.random.default_rng(0)
+    B, S, new_tokens = 4, 512, 16
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32))}
+
+    plain = Engine(model, params)
+    toks_plain, cache = plain.generate(batch, new_tokens)
+
+    comp = Engine(model, params,
+                  kv_compress=KVCompressionConfig(enabled=True, eb=1e-4, min_leaf_size=4096))
+    toks_comp, _ = comp.generate(batch, new_tokens, park_between=True)
+
+    parked = comp.park(cache)
+    raw = cache_bytes(cache)
+    packed = compressed_cache_bytes(parked)
+    agree = float(jnp.mean((toks_plain == toks_comp).astype(jnp.float32)))
+    print(f"KV cache: {raw / 1e6:.1f} MB -> {packed / 1e6:.1f} MB "
+          f"({raw / packed:.2f}x) at eb=1e-4")
+    print(f"decode-token agreement plain vs parked-every-step: {agree * 100:.1f}%")
+    print("sample continuation (plain): ", np.asarray(toks_plain[0][:10]))
+    print("sample continuation (parked):", np.asarray(toks_comp[0][:10]))
+
+
+if __name__ == "__main__":
+    main()

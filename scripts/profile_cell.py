@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Dry-run profiler: top collective / dot contributors for one cell.
+
+    PYTHONPATH=src python scripts/profile_cell.py --arch yi-6b --shape train_4k \
+        --mesh single [--compressed-grads] [--microbatches N]
+
+This is the §Perf "profile" on a CPU-only box: the lowered-and-partitioned
+HLO is the ground truth for what moves and what multiplies.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+from collections import defaultdict
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--compressed-grads", action="store_true")
+    p.add_argument("--opt", default="none")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--top", type=int, default=12)
+    args = p.parse_args()
+
+    from repro.launch.dryrun import _build
+    from repro.launch import hlo_cost as hc
+
+    model, mesh, step, sargs = _build(args.arch, args.shape, args.mesh == "multi",
+                                      compressed_grads=args.compressed_grads,
+                                      microbatches=args.microbatches, opt=args.opt)
+    text = step.lower(*sargs).compile().as_text()
+    comps = hc.parse_computations(text)
+    entry = [n for n in comps if n.startswith("main")][0]
+
+    edges = defaultdict(list)
+    for cname, c in comps.items():
+        for op in c.ops:
+            if op.opcode == "while":
+                mb, mc = hc._ATTR_BODY.search(op.rest), hc._ATTR_COND.search(op.rest)
+                trips = hc._trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb:
+                    edges[cname].append((mb.group(1), float(trips)))
+                if mc:
+                    edges[cname].append((mc.group(1), float(trips + 1)))
+            else:
+                for attr in (hc._ATTR_CALLS, hc._ATTR_BODY, hc._ATTR_COND):
+                    m2 = attr.search(op.rest)
+                    if m2 and m2.group(1) in comps:
+                        edges[cname].append((m2.group(1), 1.0))
+    order, state = [], {}
+
+    def dfs(n):
+        if state.get(n) == 2:
+            return
+        state[n] = 1
+        for ch, _ in edges.get(n, []):
+            if state.get(ch) != 1:
+                dfs(ch)
+        state[n] = 2
+        order.append(n)
+
+    dfs(entry)
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    for n in reversed(order):
+        for ch, w in edges.get(n, []):
+            mult[ch] += mult[n] * w
+
+    colls, dots = [], []
+    for cname, c in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        for op in c.ops:
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base in hc.COLLECTIVES:
+                b = hc._shape_bytes(op.out_shape)
+                colls.append((m * b, m, b, base, op.out_shape[:64], cname[:44]))
+            elif op.opcode == "dot":
+                f = hc._dot_flops(op, c)
+                opnd = sum(hc._shape_bytes(c.shapes.get(nm, ""))
+                           for nm in hc._operand_names(op.rest))
+                dots.append((m * (opnd + hc._shape_bytes(op.out_shape)), m * f,
+                             m, op.out_shape[:64], cname[:44]))
+
+    total_coll = sum(t[0] for t in colls)
+    print(f"== collectives (total {total_coll:.3e} B/device) ==")
+    for t in sorted(colls, key=lambda x: -x[0])[: args.top]:
+        print(f"{t[0]:11.3e}B ({100*t[0]/max(total_coll,1):4.1f}%) mult={t[1]:7.0f} "
+              f"{t[3]:18s} {t[4]}  @{t[5]}")
+    total_bytes = sum(t[0] for t in dots)
+    total_flops = sum(t[1] for t in dots)
+    print(f"\n== dots (traffic {total_bytes:.3e} B, flops {total_flops:.3e}) ==")
+    for t in sorted(dots, key=lambda x: -x[0])[: args.top]:
+        print(f"{t[0]:11.3e}B flops={t[1]:9.3e} mult={t[2]:7.0f} {t[3]}  @{t[4]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Serial/parallel dry-run driver: one subprocess per (arch, shape, mesh) cell.
+
+Subprocess isolation keeps a single cell's compile crash (or OOM) from
+taking down the sweep; JSONs are resumable (existing files skip).
+"""
+import os, subprocess, sys, time
+from concurrent.futures import ThreadPoolExecutor
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+from repro import configs  # noqa: E402
+from repro.configs.base import cells_for  # noqa: E402
+
+OUT = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+PAR = int(os.environ.get("DRYRUN_PAR", "1"))
+os.makedirs(OUT, exist_ok=True)
+
+cells = []
+for arch in configs.ARCH_IDS:
+    for shape in cells_for(configs.get(arch)):
+        for mesh in ("single", "multi"):
+            cells.append((arch, shape, mesh))
+
+def run(cell):
+    arch, shape, mesh = cell
+    tag = f"{arch}_{shape}_{mesh}"
+    path = os.path.join(OUT, tag + ".json")
+    if os.path.exists(path):
+        return tag, "skip", 0.0
+    t0 = time.time()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh, "--out", path],
+            env=env, capture_output=True, text=True, timeout=3000,
+            cwd=os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+    except subprocess.TimeoutExpired:
+        with open(path + ".err", "w") as f:
+            f.write("TIMEOUT")
+        return tag, "TIMEOUT", time.time() - t0
+    dt = time.time() - t0
+    if r.returncode != 0:
+        with open(path + ".err", "w") as f:
+            f.write(r.stdout[-4000:] + "\n===STDERR===\n" + r.stderr[-8000:])
+        return tag, "FAIL", dt
+    return tag, "ok", dt
+
+with ThreadPoolExecutor(max_workers=PAR) as ex:
+    for tag, status, dt in ex.map(run, cells):
+        print(f"[{status}] {tag} ({dt:.0f}s)", flush=True)

@@ -1,0 +1,40 @@
+"""Elastic rescaling: move a training state onto a different mesh.
+
+Node failures / capacity changes are handled by re-instantiating the mesh at
+the new device count and re-laying-out the checkpointed state:
+
+    new_mesh  = make_mesh(new_shape, axes)
+    new_shard = tree_shardings(logical_specs, abstract, new_mesh)
+    state     = ckpt.restore(root, template, shardings=new_shard)
+
+Because shardings are *resolved from logical axis names per mesh* (dist/
+sharding.py), no model or optimizer code changes across mesh shapes; the only
+constraint is divisibility, which resolve_spec relaxes to replication when
+violated. Data-stream determinism across rescaling is provided by
+data/tokens.py (shard assignment is a pure function of step and index).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.dist import sharding as shd
+
+
+def reshard(tree: Any, logical: Any, new_mesh) -> Any:
+    """Live reshard (device-to-device) of a pytree onto a new mesh."""
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    new_sh = shd.tree_shardings(logical, abstract, new_mesh)
+    return jax.device_put(tree, new_sh)
+
+
+def replan_batch(global_batch: int, new_mesh) -> dict:
+    """Recompute per-host batch assignment after a topology change."""
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in new_mesh.shape:
+            dp *= new_mesh.shape[ax]
+    if global_batch % dp:
+        raise ValueError(f"global batch {global_batch} not divisible by dp={dp}")
+    return {"dp_shards": dp, "per_shard": global_batch // dp}

@@ -1,0 +1,27 @@
+"""Assigned architecture registry: --arch <id> resolves here."""
+from importlib import import_module
+
+from .base import SHAPES, ArchConfig, ShapeConfig, cells_for  # noqa: F401
+
+ARCH_IDS = (
+    "qwen2-vl-72b", "glm4-9b", "internlm2-20b", "yi-6b", "mistral-large-123b",
+    "whisper-tiny", "dbrx-132b", "llama4-scout-17b-a16e", "zamba2-2.7b", "rwkv6-3b",
+)
+
+_MODULES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "glm4-9b": "glm4_9b",
+    "internlm2-20b": "internlm2_20b",
+    "yi-6b": "yi_6b",
+    "mistral-large-123b": "mistral_large_123b",
+    "whisper-tiny": "whisper_tiny",
+    "dbrx-132b": "dbrx_132b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def get(arch_id: str, smoke: bool = False) -> ArchConfig:
+    mod = import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SMOKE if smoke else mod.CONFIG

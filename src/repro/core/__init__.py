@@ -1,0 +1,10 @@
+"""FZ core: the paper's compression pipeline as a composable JAX module."""
+from . import baselines, metrics  # noqa: F401
+from . import encode as encode_mod  # noqa: F401  (zero-block encoder stage)
+from . import quant as quant_mod  # noqa: F401
+from . import shuffle as shuffle_mod  # noqa: F401
+from .encode import BLOCK_BYTES, BLOCK_WORDS  # noqa: F401
+from .fz import (FZCompressed, FZConfig, compress, decompress, roundtrip,  # noqa: F401
+                 tree_compress, tree_decompress)
+from .quant import dual_dequantize, dual_quantize, lorenzo_delta, lorenzo_inverse  # noqa: F401
+from .shuffle import TILE, bitshuffle, bitunshuffle, transpose16  # noqa: F401

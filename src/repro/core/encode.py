@@ -1,0 +1,97 @@
+"""Fast zero-block lossless encoder (FZ-GPU §3.4), pure-JAX reference semantics.
+
+Phase 1: partition the bitshuffled u16 stream into 16-byte blocks (8 words),
+flag non-zero blocks, and pack the flags into a bit-flag array (max CR = 128,
+matching the paper). In the production path phase 1 is fused into the
+bitshuffle Pallas kernel exactly as the paper fuses it into the CUDA kernel.
+
+Phase 2: exclusive prefix-sum of the flags gives each surviving block its
+output offset; compaction copies surviving blocks to the payload. TPU
+adaptation: CUB ``ExclusiveSum`` -> XLA parallel scan (``jnp.cumsum``); the
+scatter-style CUDA compaction -> gather-based compaction
+(``jnp.nonzero(size=...)`` + ``take``), which is the TPU-friendly direction.
+
+JAX static shapes require a fixed payload *capacity*; ``nnz_blocks`` reports
+the used prefix, and byte accounting uses exact used bytes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK_WORDS = 8          # u16 words per zero-detection block (16 bytes)
+BLOCK_BYTES = 2 * BLOCK_WORDS
+FLAGS_PER_WORD = 32      # bit flags packed per u32
+
+
+def block_flags(shuffled: jax.Array) -> jax.Array:
+    """(n_words,) u16 -> (n_blocks,) bool non-zero flags."""
+    if shuffled.size % BLOCK_WORDS:
+        raise ValueError(f"{shuffled.size} words not a multiple of {BLOCK_WORDS}")
+    return jnp.any(shuffled.reshape(-1, BLOCK_WORDS) != 0, axis=-1)
+
+
+def pack_bitflags(flags: jax.Array) -> jax.Array:
+    """(n_blocks,) bool -> (ceil(n/32),) u32 bit-flag array (LSB-first)."""
+    n = flags.size
+    pad = (-n) % FLAGS_PER_WORD
+    f = jnp.pad(flags, (0, pad)).reshape(-1, FLAGS_PER_WORD).astype(jnp.uint32)
+    return jnp.sum(f << jnp.arange(FLAGS_PER_WORD, dtype=jnp.uint32), axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bitflags(bitflags: jax.Array, n_blocks: int) -> jax.Array:
+    """(W,) u32 -> (n_blocks,) bool."""
+    bits = (bitflags[:, None] >> jnp.arange(FLAGS_PER_WORD, dtype=jnp.uint32)) & 1
+    return bits.reshape(-1)[:n_blocks].astype(bool)
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def encode(shuffled: jax.Array, *, capacity: int):
+    """Compact non-zero blocks.
+
+    Returns (bitflags u32[W], payload u16[capacity, 8], nnz i32[]).
+    Blocks beyond ``capacity`` are dropped (callers size capacity = n_blocks
+    for lossless-by-construction, or smaller for bounded wire formats with a
+    raw fallback; the dropped count is nnz - capacity when positive).
+    """
+    blocks = shuffled.reshape(-1, BLOCK_WORDS)
+    flags = jnp.any(blocks != 0, axis=-1)
+    nnz = jnp.sum(flags, dtype=jnp.int32)
+    (src,) = jnp.nonzero(flags, size=capacity, fill_value=0)
+    payload = blocks[src]
+    # slots past nnz replicate block 0; zero them so payload is deterministic
+    payload = jnp.where(jnp.arange(capacity)[:, None] < nnz, payload, 0)
+    return pack_bitflags(flags), payload.astype(jnp.uint16), nnz
+
+
+@partial(jax.jit, static_argnames=("n_blocks",))
+def decode(bitflags: jax.Array, payload: jax.Array, *, n_blocks: int) -> jax.Array:
+    """Inverse of :func:`encode` -> flat u16 word stream (n_blocks * 8 words).
+
+    Offsets are the exclusive prefix sum of the unpacked flags; each flagged
+    block gathers its payload slot, unflagged blocks are zero. Blocks whose
+    offset exceeded capacity at encode time decode to zero (bounded-capacity
+    wire mode; exact when capacity >= nnz).
+    """
+    flags = unpack_bitflags(bitflags, n_blocks)
+    offsets = jnp.cumsum(flags.astype(jnp.int32)) - flags.astype(jnp.int32)  # exclusive
+    cap = payload.shape[0]
+    in_cap = flags & (offsets < cap)
+    blocks = jnp.where(in_cap[:, None], payload[jnp.minimum(offsets, cap - 1)], 0)
+    return blocks.reshape(-1).astype(jnp.uint16)
+
+
+def used_bytes(n_blocks: int, nnz: jax.Array, n_outliers: jax.Array | None = None,
+               header_bytes: int = 32) -> jax.Array:
+    """Exact compressed size in bytes (header + bitflags + blocks + outliers).
+
+    int32 arithmetic: valid for per-leaf tensors < 2 GiB compressed, which the
+    tree helpers guarantee by compressing leaf-wise.
+    """
+    flag_bytes = (n_blocks + 7) // 8
+    out = header_bytes + flag_bytes + nnz.astype(jnp.int32) * BLOCK_BYTES
+    if n_outliers is not None:
+        out = out + n_outliers.astype(jnp.int32) * 8  # 4B idx + 4B residual
+    return out

@@ -1,0 +1,177 @@
+"""FZ public API: jit-safe error-bounded lossy (de)compression containers.
+
+Pipeline (paper Fig. 1):  optimized dual-quantization -> bitshuffle ->
+zero-block encoding. All stages are fixed-shape jnp programs, so a compressed
+tensor is an ordinary pytree that can flow through jit / shard_map /
+collectives — this is what makes the compressor a first-class distributed
+feature (gradient compression, KV-cache pages, checkpoint payloads).
+
+Two execution paths, selected by ``FZConfig.use_kernels``:
+  * pure-jnp reference (core.quant/shuffle/encode) — the oracle;
+  * Pallas TPU kernels (kernels/ops.py) — fused quant and shuffle+flag kernels
+    mirroring the paper's fused CUDA kernels (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import encode as enc
+from . import quant, shuffle
+
+
+@dataclasses.dataclass(frozen=True)
+class FZConfig:
+    """Static compressor configuration (hashable; safe as a jit static arg)."""
+    eb: float = 1e-3               # error bound (absolute, or relative to range)
+    eb_mode: str = "rel"           # "abs" | "rel" (relative to value range, paper-style)
+    code_mode: str = "sign_mag"    # "sign_mag" (paper) | "zigzag" (beyond-paper)
+    capacity_frac: float = 1.0     # payload capacity as fraction of worst case
+    outlier_frac: float = 1 / 256  # exact-outlier side-channel capacity fraction
+    exact_outliers: bool = True    # strict error bound (beyond-paper); False = paper-faithful
+    use_kernels: bool = False      # route hot stages through Pallas kernels
+
+    def payload_capacity(self, n: int) -> int:
+        n_blocks = self.n_blocks(n)
+        return max(1, int(n_blocks * self.capacity_frac))
+
+    def outlier_capacity(self, n: int) -> int:
+        if not self.exact_outliers:
+            return 0
+        return max(1, int(n * self.outlier_frac))
+
+    @staticmethod
+    def padded_n(n: int) -> int:
+        return (n + shuffle.TILE - 1) // shuffle.TILE * shuffle.TILE
+
+    @classmethod
+    def n_blocks(cls, n: int) -> int:
+        return cls.padded_n(n) // enc.BLOCK_WORDS
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("bitflags", "payload", "nnz_blocks", "outlier_idx",
+                      "outlier_val", "n_outliers", "eb_abs"),
+         meta_fields=("shape", "dtype_name"))
+@dataclasses.dataclass
+class FZCompressed:
+    """Fixed-shape compressed tensor (a pytree; jit/collective-safe)."""
+    bitflags: jax.Array        # u32[ceil(n_blocks/32)]
+    payload: jax.Array         # u16[capacity, 8]
+    nnz_blocks: jax.Array      # i32[] — used payload prefix
+    outlier_idx: jax.Array     # i32[K]
+    outlier_val: jax.Array     # i32[K]
+    n_outliers: jax.Array      # i32[]
+    eb_abs: jax.Array          # f32[] — resolved absolute error bound
+    shape: tuple[int, ...]     # static: original tensor shape
+    dtype_name: str            # static: original dtype
+
+    @property
+    def n(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+    def used_bytes(self) -> jax.Array:
+        return enc.used_bytes(FZConfig.n_blocks(self.n), self.nnz_blocks, self.n_outliers)
+
+    def raw_bytes(self) -> int:
+        return self.n * jnp.dtype(self.dtype_name).itemsize
+
+    def compression_ratio(self) -> jax.Array:
+        return self.raw_bytes() / self.used_bytes().astype(jnp.float32)
+
+    def wire_bytes(self) -> int:
+        """Bytes actually moved if this container crosses a link (capacity-sized)."""
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(self)))
+
+
+def resolve_eb(data: jax.Array, cfg: FZConfig) -> jax.Array:
+    if cfg.eb_mode == "abs":
+        return jnp.float32(cfg.eb)
+    if cfg.eb_mode == "rel":
+        rng = jnp.max(data) - jnp.min(data)
+        # floor at eb*max|x|: keeps constant fields finite (range == 0) and
+        # bounds pre-quantization codes by 1/(2*eb) — no int32 overflow
+        maxabs = jnp.max(jnp.abs(data))
+        eb = cfg.eb * jnp.maximum(rng, maxabs).astype(jnp.float32)
+        return jnp.maximum(eb, jnp.float32(1e-30))
+    raise ValueError(f"unknown eb_mode {cfg.eb_mode!r}")
+
+
+def _stages(cfg: FZConfig):
+    """Pick reference vs Pallas-kernel implementations of the hot stages."""
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        return kops.lorenzo_quantize, kops.bitshuffle_flag_encode, kops.bitunshuffle
+    def ref_quant(data, eb, *, code_mode, outlier_capacity):
+        return quant.dual_quantize(data, eb, code_mode=code_mode,
+                                   outlier_capacity=outlier_capacity)
+    def ref_shuffle_encode(codes_flat, *, capacity):
+        shuffled = shuffle.bitshuffle(codes_flat)
+        return enc.encode(shuffled, capacity=capacity)
+    return ref_quant, ref_shuffle_encode, shuffle.bitunshuffle
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
+    """Error-bounded lossy compression of a 1-3D float array."""
+    data = data.astype(jnp.float32)
+    eb = resolve_eb(data, cfg)
+    quantize, shuffle_encode, _ = _stages(cfg)
+    codes, oidx, oval, n_over = quantize(
+        data, eb, code_mode=cfg.code_mode,
+        outlier_capacity=cfg.outlier_capacity(data.size))
+    flat = shuffle.pad_to_tiles(codes.reshape(-1))
+    bitflags, payload, nnz = shuffle_encode(flat, capacity=cfg.payload_capacity(data.size))
+    return FZCompressed(bitflags=bitflags, payload=payload, nnz_blocks=nnz,
+                        outlier_idx=oidx, outlier_val=oval,
+                        n_outliers=jnp.minimum(n_over, oidx.size).astype(jnp.int32),
+                        eb_abs=eb, shape=tuple(data.shape), dtype_name="float32")
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def decompress(c: FZCompressed, cfg: FZConfig) -> jax.Array:
+    """Inverse pipeline: decode -> bit-unshuffle -> inverse Lorenzo -> dequant."""
+    _, _, unshuffle = _stages(cfg)
+    words = enc.decode(c.bitflags, c.payload, n_blocks=FZConfig.n_blocks(c.n))
+    codes = unshuffle(words)[: c.n]
+    oidx = c.outlier_idx if cfg.exact_outliers else None
+    oval = c.outlier_val if cfg.exact_outliers else None
+    return quant.dual_dequantize(codes, c.eb_abs, c.shape, code_mode=cfg.code_mode,
+                                 outlier_idx=oidx, outlier_val=oval)
+
+
+def roundtrip(data: jax.Array, cfg: FZConfig):
+    """compress + decompress; returns (reconstruction, container)."""
+    c = compress(data, cfg)
+    return decompress(c, cfg), c
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers (gradients, optimizer states, checkpoints)
+# ---------------------------------------------------------------------------
+
+def tree_compress(tree: Any, cfg: FZConfig) -> Any:
+    """Compress every float leaf of a pytree (leaves >= 1 tile; small leaves pass through)."""
+    def leaf_fn(x):
+        if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating) \
+                and x.size >= shuffle.TILE and x.ndim <= 3:
+            return compress(x, cfg)
+        return x
+    return jax.tree.map(leaf_fn, tree)
+
+
+def tree_decompress(tree: Any, cfg: FZConfig, dtypes: Any | None = None) -> Any:
+    def leaf_fn(x):
+        return decompress(x, cfg) if isinstance(x, FZCompressed) else x
+    out = jax.tree.map(leaf_fn, tree, is_leaf=lambda x: isinstance(x, FZCompressed))
+    if dtypes is not None:
+        out = jax.tree.map(lambda x, d: x.astype(d), out, dtypes)
+    return out

@@ -1,0 +1,52 @@
+"""Distortion / ratio metrics used by the paper's evaluation (§4.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psnr(orig: jax.Array, rec: jax.Array) -> jax.Array:
+    """Range-based PSNR in dB (the paper's primary distortion metric)."""
+    orig = orig.astype(jnp.float32)
+    rec = rec.astype(jnp.float32)
+    rng = jnp.max(orig) - jnp.min(orig)
+    mse = jnp.mean((orig - rec) ** 2)
+    return 20.0 * jnp.log10(rng) - 10.0 * jnp.log10(jnp.maximum(mse, 1e-30))
+
+
+def max_abs_err(orig: jax.Array, rec: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(orig.astype(jnp.float32) - rec.astype(jnp.float32)))
+
+
+def nrmse(orig: jax.Array, rec: jax.Array) -> jax.Array:
+    rng = jnp.max(orig) - jnp.min(orig)
+    return jnp.sqrt(jnp.mean((orig - rec) ** 2)) / jnp.maximum(rng, 1e-30)
+
+
+def bitrate(raw_bytes: float, compressed_bytes: jax.Array) -> jax.Array:
+    """Average bits per (assumed f32) value."""
+    return 32.0 * compressed_bytes / raw_bytes
+
+
+def _window_mean(x: jax.Array, k: int) -> jax.Array:
+    """Uniform kxk window mean of a 2D array via two separable box filters."""
+    kern = jnp.ones((k,), x.dtype) / k
+    x = jax.vmap(lambda r: jnp.convolve(r, kern, mode="valid"))(x)
+    x = jax.vmap(lambda c: jnp.convolve(c, kern, mode="valid"), in_axes=1, out_axes=1)(x)
+    return x
+
+
+def ssim2d(orig: jax.Array, rec: jax.Array, k: int = 7) -> jax.Array:
+    """SSIM over a 2D field (uniform window; the paper's secondary fidelity metric)."""
+    orig = orig.astype(jnp.float32)
+    rec = rec.astype(jnp.float32)
+    rng = jnp.max(orig) - jnp.min(orig)
+    c1 = (0.01 * rng) ** 2 + 1e-12
+    c2 = (0.03 * rng) ** 2 + 1e-12
+    mu_x, mu_y = _window_mean(orig, k), _window_mean(rec, k)
+    xx, yy, xy = _window_mean(orig * orig, k), _window_mean(rec * rec, k), _window_mean(orig * rec, k)
+    var_x = jnp.maximum(xx - mu_x ** 2, 0.0)
+    var_y = jnp.maximum(yy - mu_y ** 2, 0.0)
+    cov = xy - mu_x * mu_y
+    s = ((2 * mu_x * mu_y + c1) * (2 * cov + c2)) / ((mu_x ** 2 + mu_y ** 2 + c1) * (var_x + var_y + c2))
+    return jnp.mean(s)

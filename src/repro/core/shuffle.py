@@ -1,0 +1,76 @@
+"""Bitshuffle (FZ-GPU §3.3), pure-JAX reference semantics.
+
+Reorganizes a stream of uint16 quantization codes into contiguous bit-planes
+so that small magnitudes become long zero runs for the zero-block encoder.
+
+TPU adaptation (see DESIGN.md §2): the CUDA ``__ballot_sync`` warp vote is
+replaced by a Hacker's-Delight masked-swap 16x16 bit-matrix transpose — four
+shift/mask/select stages, fully vectorized over VPU lanes. The resulting bit
+convention is the involution
+
+    (element e, bit b)  ->  (element 15-b, bit 15-e)
+
+i.e. output word p of a 16-element group holds bit-plane 15-p, bit-reversed
+within the word. Compression ratio is invariant to any fixed bit permutation;
+the convention is documented and pinned by tests.
+
+Tile layout: codes are processed in tiles of ``TILE`` = 4096 codes (8 KiB).
+Within a tile the per-group planes are transposed to plane-major order so each
+bit-plane of the whole tile is contiguous (256 u16 words per plane), which is
+what lets an all-zero high plane produce 32 consecutive zero 16-byte blocks.
+
+These functions are the oracles for kernels/bitshuffle_flag.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TILE = 4096            # codes per shuffle tile (8 KiB of u16)
+GROUP = 16             # codes per bit-matrix transpose group
+GROUPS_PER_TILE = TILE // GROUP  # 256
+
+_STAGES = ((8, 0xFF00), (4, 0xF0F0), (2, 0xCCCC), (1, 0xAAAA))
+
+
+def transpose16(x: jax.Array) -> jax.Array:
+    """Bit-matrix transpose of (..., 16) uint16 groups (involution).
+
+    Four masked-swap stages; every op is a dense lane-wise shift/mask/select,
+    the TPU-native analogue of the paper's warp ballot.
+    """
+    if x.shape[-1] != GROUP:
+        raise ValueError(f"last dim must be {GROUP}, got {x.shape}")
+    idx = jnp.arange(GROUP)
+    for delta, mask in _STAGES:
+        m = jnp.uint16(mask)
+        lo = jnp.uint16(~mask & 0xFFFF)
+        partner = x[..., idx ^ delta]
+        hi_val = (x & m) | ((partner & m) >> delta)
+        lo_val = ((partner & lo) << delta) | (x & lo)
+        x = jnp.where((idx & delta) == 0, hi_val, lo_val)
+    return x
+
+
+def pad_to_tiles(codes_flat: jax.Array) -> jax.Array:
+    """Zero-pad a flat u16 code stream to a whole number of tiles."""
+    n = codes_flat.size
+    padded = (n + TILE - 1) // TILE * TILE
+    return jnp.pad(codes_flat, (0, padded - n))
+
+
+def bitshuffle(codes: jax.Array) -> jax.Array:
+    """Flat (multiple-of-TILE) u16 codes -> plane-major bitshuffled u16 words."""
+    if codes.size % TILE:
+        raise ValueError(f"size {codes.size} not a multiple of TILE={TILE}; pad first")
+    g = codes.reshape(-1, GROUPS_PER_TILE, GROUP)
+    t = transpose16(g)                       # (tiles, 256 groups, 16 planes)
+    return t.transpose(0, 2, 1).reshape(-1)  # plane-major within each tile
+
+
+def bitunshuffle(shuffled: jax.Array) -> jax.Array:
+    """Inverse of :func:`bitshuffle` (word transpose back, then bit transpose)."""
+    if shuffled.size % TILE:
+        raise ValueError(f"size {shuffled.size} not a multiple of TILE={TILE}")
+    t = shuffled.reshape(-1, GROUP, GROUPS_PER_TILE).transpose(0, 2, 1)
+    return transpose16(t).reshape(-1)

@@ -1,0 +1,2 @@
+from .fields import make_field, FIELD_KINDS  # noqa: F401
+from .tokens import TokenStream  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot spots (+ oracles).
+
+kernel modules (pl.pallas_call + BlockSpec VMEM tiling):
+    lorenzo_quant    -- fused pre-quantization + Lorenzo + sign-mag codes
+    bitshuffle_flag  -- fused bitshuffle + zero-block flags (paper's fusion)
+ops.py -- jit wrappers (interpret-mode fallback off-TPU); ref.py -- oracles.
+"""
+from . import bitshuffle_flag, lorenzo_quant, ops, ref  # noqa: F401

@@ -1,0 +1,117 @@
+"""Fused bitshuffle + zero-block flagging Pallas TPU kernel (paper §3.3-3.4).
+
+Mirrors FZ-GPU's fused CUDA kernel: one pass over the quantization codes in
+fast memory produces BOTH the bitshuffled stream and the per-16-byte-block
+zero flags, eliminating the extra HBM round-trip the paper eliminates with
+shared memory (their Figure 10 "bitshuffle-mark-v2").
+
+TPU adaptation (DESIGN.md §2):
+  * warp ballot -> 4-stage masked-swap 16x16 bit-matrix transpose, expressed
+    with lane-local shifts/masks and a static half-swap data movement
+    (reshape + flip of a size-2 axis), i.e. no gathers, no cross-lane
+    conflicts, fully VPU-vectorizable;
+  * 32x33 padded shared memory -> VMEM tiles via BlockSpec; no banking.
+
+Block layout: each grid step processes TILES_PER_BLOCK tiles of TILE=4096
+codes (u16). VMEM footprint per step: in 64 KiB + out 64 KiB + flags 4 KiB —
+comfortably within a v5e core's ~128 KiB-per-buffer budget at the default 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096
+GROUP = 16
+GROUPS_PER_TILE = TILE // GROUP          # 256
+BLOCK_WORDS = 8                          # words per zero-flag block (16 B)
+BLOCKS_PER_TILE = TILE // BLOCK_WORDS    # 512
+TILES_PER_BLOCK = 8                      # tiles per grid step
+
+_STAGES = ((8, 0xFF00), (4, 0xF0F0), (2, 0xCCCC), (1, 0xAAAA))
+
+
+def _half_swap(x: jax.Array, delta: int) -> jax.Array:
+    """Lane permutation i -> i XOR delta on the last axis (size 16), as a
+    static reshape + flip of a size-2 axis (TPU-safe; no gather)."""
+    s = x.shape
+    y = x.reshape(s[:-1] + (GROUP // (2 * delta), 2, delta))
+    return y[..., ::-1, :].reshape(s)
+
+
+def transpose16_inkernel(x: jax.Array) -> jax.Array:
+    """Masked-swap bit-matrix transpose of (..., 16) u16 groups (involution)."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    for delta, mask in _STAGES:
+        m = jnp.uint16(mask)
+        lo = jnp.uint16(~mask & 0xFFFF)
+        partner = _half_swap(x, delta)
+        hi_val = (x & m) | ((partner & m) >> delta)
+        lo_val = ((partner & lo) << delta) | (x & lo)
+        x = jnp.where((lane & delta) == 0, hi_val, lo_val)
+    return x
+
+
+def _bitshuffle_flag_kernel(codes_ref, shuffled_ref, flags_ref):
+    """codes_ref: (TB, TILE) u16 -> shuffled (TB, TILE) u16, flags (TB, 512) u8."""
+    tb = codes_ref.shape[0]
+    g = codes_ref[...].reshape(tb, GROUPS_PER_TILE, GROUP)
+    t = transpose16_inkernel(g)                       # (TB, 256 groups, 16 planes)
+    planes = jnp.swapaxes(t, 1, 2)                    # (TB, 16 planes, 256 words)
+    shuffled = planes.reshape(tb, TILE)
+    shuffled_ref[...] = shuffled
+    # fused phase-1 of the encoder: zero flags per 8-word block
+    blocks = shuffled.reshape(tb, BLOCKS_PER_TILE, BLOCK_WORDS)
+    flags_ref[...] = jnp.any(blocks != 0, axis=-1).astype(jnp.uint8)
+
+
+def _unshuffle_kernel(shuffled_ref, codes_ref):
+    tb = shuffled_ref.shape[0]
+    planes = shuffled_ref[...].reshape(tb, GROUP, GROUPS_PER_TILE)
+    t = jnp.swapaxes(planes, 1, 2)                    # (TB, 256, 16)
+    codes_ref[...] = transpose16_inkernel(t).reshape(tb, TILE)
+
+
+def _pad_tiles(n_tiles: int) -> int:
+    return (n_tiles + TILES_PER_BLOCK - 1) // TILES_PER_BLOCK * TILES_PER_BLOCK
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitshuffle_flag(codes_tiles: jax.Array, *, interpret: bool = False):
+    """(n_tiles, TILE) u16 -> (shuffled (n_tiles, TILE) u16, flags (n_tiles, 512) u8)."""
+    n_tiles = codes_tiles.shape[0]
+    padded = _pad_tiles(n_tiles)
+    x = jnp.pad(codes_tiles, ((0, padded - n_tiles), (0, 0)))
+    grid = padded // TILES_PER_BLOCK
+    shuffled, flags = pl.pallas_call(
+        _bitshuffle_flag_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILES_PER_BLOCK, TILE), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILES_PER_BLOCK, TILE), lambda i: (i, 0)),
+                   pl.BlockSpec((TILES_PER_BLOCK, BLOCKS_PER_TILE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((padded, TILE), jnp.uint16),
+                   jax.ShapeDtypeStruct((padded, BLOCKS_PER_TILE), jnp.uint8)],
+        interpret=interpret,
+    )(x)
+    return shuffled[:n_tiles], flags[:n_tiles]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitunshuffle_tiles(shuffled_tiles: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(n_tiles, TILE) u16 shuffled -> original code order."""
+    n_tiles = shuffled_tiles.shape[0]
+    padded = _pad_tiles(n_tiles)
+    x = jnp.pad(shuffled_tiles, ((0, padded - n_tiles), (0, 0)))
+    grid = padded // TILES_PER_BLOCK
+    codes = pl.pallas_call(
+        _unshuffle_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILES_PER_BLOCK, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILES_PER_BLOCK, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, TILE), jnp.uint16),
+        interpret=interpret,
+    )(x)
+    return codes[:n_tiles]

@@ -1,0 +1,140 @@
+"""Fused pre-quantization + Lorenzo + code-conversion Pallas kernel (paper §3.2).
+
+One pass: float data -> saturating sign-magnitude u16 codes, branch-free
+(the paper's "pred-quant-v2": no radius shift, no outlier path, fewer
+branches -> no warp divergence; on TPU this becomes select-only VPU code).
+
+Halo handling (TPU adaptation): cuSZ's CUDA kernel re-quantizes chunk-border
+elements redundantly per thread block. Here each grid step owns a band of
+leading-axis rows/planes and receives a 1-row halo *view of the same input
+array* via a second BlockSpec (block shape 1 along the banded axis makes the
+index map element-granular), so no shifted copies are materialized in HBM —
+traffic is n + n/band vs. the GPU version's redundant boundary recompute.
+
+Banding: the band covers all trailing axes, so all trailing-axis differences
+are band-internal; only the leading-axis difference needs the halo. The
+first band masks its (clamped) halo to zero via pl.program_id.
+
+Kernel-path limitation (faithful to the paper): no exact-outlier side
+channel. FZConfig(use_kernels=True, exact_outliers=True) routes quantization
+through the reference path instead (see kernels/ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_MAG = 0x7FFF
+MAX_BAND = 8                  # leading-axis rows/planes per grid step
+VMEM_BAND_BUDGET = 4 << 20    # bytes of f32 input per band (VMEM headroom)
+
+
+def _band_for(trailing_elems: int) -> int:
+    """Shrink the band so a band's f32 input stays within the VMEM budget
+    (large 3D fields: a single 1024x1024 plane is 4 MiB)."""
+    return max(1, min(MAX_BAND, VMEM_BAND_BUDGET // max(trailing_elems * 4, 1)))
+
+
+def _prequant(x: jax.Array, two_eb: jax.Array) -> jax.Array:
+    # divide (not multiply-by-reciprocal): bit-identical to the reference;
+    # reciprocal multiply flips rint at ties and breaks exactness.
+    return jnp.rint(x / two_eb).astype(jnp.int32)
+
+
+def _to_code(d: jax.Array, code_mode: str) -> jax.Array:
+    if code_mode == "sign_mag":
+        mag = jnp.minimum(jnp.abs(d), MAX_MAG)
+        return mag.astype(jnp.uint16) | jnp.where(d < 0, jnp.uint16(0x8000), jnp.uint16(0))
+    # zigzag
+    z = jnp.minimum((d << 1) ^ (d >> 31), 0xFFFF)
+    return z.astype(jnp.uint16)
+
+
+def _shift_prepend(q: jax.Array, first, axis: int) -> jax.Array:
+    """q shifted by one along ``axis`` with ``first`` as the leading slice."""
+    tail = jax.lax.slice_in_dim(q, 0, q.shape[axis] - 1, axis=axis)
+    return jax.lax.concatenate([first, tail], dimension=axis)
+
+
+def _make_kernel(ndim: int, code_mode: str):
+    def kernel(x_ref, halo_ref, eb_ref, out_ref):
+        two_eb = 2.0 * eb_ref[0, 0]
+        q = _prequant(x_ref[...], two_eb)
+        is_first = pl.program_id(0) == 0
+        halo = _prequant(halo_ref[...], two_eb)
+        halo = jnp.where(is_first, jnp.zeros_like(halo), halo)
+        if ndim == 1:
+            # flattened-1D layout (rows, C): continuous diff across row ends.
+            # previous element of col 0 = last col of previous row; for the
+            # band's first row that is the halo row's last element.
+            prev_last = _shift_prepend(q[:, -1:], halo[:, -1:], axis=0)  # (band, 1)
+            d = q - _shift_prepend(q, prev_last, axis=1)
+        else:
+            # leading-axis diff uses the halo slice; trailing axes internal.
+            d = q - _shift_prepend(q, halo, axis=0)
+            for ax in range(1, ndim):
+                zero = jnp.zeros_like(jax.lax.slice_in_dim(d, 0, 1, axis=ax))
+                d = d - _shift_prepend(d, zero, axis=ax)
+        out_ref[...] = _to_code(d, code_mode)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("code_mode", "interpret"))
+def lorenzo_quant(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_mag",
+                  interpret: bool = False) -> jax.Array:
+    """float (1-3)D -> u16 codes, identical to ref.lorenzo_quant_ref.
+
+    1D inputs are reshaped to (rows, 1024) with the cross-row boundary handled
+    inside the kernel, so the difference stream matches the flat reference.
+    """
+    shape = data.shape
+    ndim = data.ndim
+    if ndim > 3:
+        raise ValueError(f"Lorenzo kernel supports 1-3D, got {ndim}D")
+    x = data.astype(jnp.float32)
+    if ndim == 1:
+        c = 1024
+        n = x.size
+        rows = (n + c - 1) // c
+        x = jnp.pad(x, (0, rows * c - n)).reshape(rows, c)
+        kern_nd = 1
+    else:
+        kern_nd = ndim
+    lead = x.shape[0]
+    trailing_elems = 1
+    for s in x.shape[1:]:
+        trailing_elems *= s
+    band = _band_for(trailing_elems)
+    bands = (lead + band - 1) // band
+    pad_lead = bands * band - lead
+    x = jnp.pad(x, [(0, pad_lead)] + [(0, 0)] * (x.ndim - 1))
+    trailing = x.shape[1:]
+
+    band_block = (band, *trailing)
+    halo_block = (1, *trailing)
+    zeros_trail = (0,) * len(trailing)
+
+    def band_index(i):
+        return (i, *zeros_trail)
+
+    def halo_index(i):
+        return (jnp.maximum(i * band - 1, 0), *zeros_trail)
+
+    eb_arr = jnp.reshape(eb.astype(jnp.float32), (1, 1))
+    codes = pl.pallas_call(
+        _make_kernel(kern_nd, code_mode),
+        grid=(bands,),
+        in_specs=[pl.BlockSpec(band_block, band_index),
+                  pl.BlockSpec(halo_block, halo_index),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec(band_block, band_index),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint16),
+        interpret=interpret,
+    )(x, x, eb_arr)
+
+    if ndim == 1:
+        return codes.reshape(-1)[: shape[0]]
+    return codes[: shape[0]]

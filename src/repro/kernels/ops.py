@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Interpret-mode fallback: on non-TPU backends (this container is CPU) the
+kernels execute through the Pallas interpreter, which runs the kernel body
+in Python/XLA for bit-exact validation against ref.py. On TPU the same
+pallas_call lowers to Mosaic.
+
+Signature compatibility: these wrappers expose the same interfaces as the
+reference stages in repro.core so FZConfig(use_kernels=True) swaps them in
+transparently (see core/fz.py:_stages).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encode as _enc
+from repro.core import quant as _quant
+from . import bitshuffle_flag as _bsf
+from . import lorenzo_quant as _lq
+
+TILE = _bsf.TILE
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lorenzo_quantize(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_mag",
+                     outlier_capacity: int = 0):
+    """Kernel-path dual-quantization (paper-faithful: saturating, no outliers).
+
+    With outlier_capacity > 0 (strict-error-bound mode) the exact residual
+    side channel needs the unsaturated deltas, which the fused kernel by
+    design never materializes — quantization falls back to the reference
+    implementation (the shuffle/encode kernels, the hot 70+% of the pipeline
+    per paper Fig. 1, still run as kernels).
+    """
+    if outlier_capacity > 0:
+        return _quant.dual_quantize(data, eb, code_mode=code_mode,
+                                    outlier_capacity=outlier_capacity)
+    codes = _lq.lorenzo_quant(data, eb, code_mode=code_mode, interpret=_interpret())
+    zero_i = jnp.zeros((0,), jnp.int32)
+    return codes, zero_i, zero_i, jnp.int32(0)
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def bitshuffle_flag_encode(codes_flat: jax.Array, *, capacity: int):
+    """Fused kernel (shuffle + phase-1 flags) + XLA phase-2 (scan + gather).
+
+    Matches repro.core.encode.encode(bitshuffle(codes_flat), capacity).
+    """
+    if codes_flat.size % TILE:
+        raise ValueError(f"size {codes_flat.size} not a multiple of TILE={TILE}")
+    tiles = codes_flat.reshape(-1, TILE)
+    shuffled, byteflags = _bsf.bitshuffle_flag(tiles, interpret=_interpret())
+    flags = byteflags.reshape(-1).astype(bool)
+    nnz = jnp.sum(flags, dtype=jnp.int32)
+    (src,) = jnp.nonzero(flags, size=capacity, fill_value=0)
+    payload = shuffled.reshape(-1, _enc.BLOCK_WORDS)[src]
+    payload = jnp.where(jnp.arange(capacity)[:, None] < nnz, payload, 0)
+    return _enc.pack_bitflags(flags), payload.astype(jnp.uint16), nnz
+
+
+@jax.jit
+def bitshuffle(codes_flat: jax.Array) -> jax.Array:
+    """Shuffle-only kernel path (flags discarded) for tests/benchmarks."""
+    shuffled, _ = _bsf.bitshuffle_flag(codes_flat.reshape(-1, TILE), interpret=_interpret())
+    return shuffled.reshape(-1)
+
+
+@jax.jit
+def bitunshuffle(words_flat: jax.Array) -> jax.Array:
+    """Inverse transform kernel, same signature as core.shuffle.bitunshuffle."""
+    tiles = words_flat.reshape(-1, TILE)
+    return _bsf.bitunshuffle_tiles(tiles, interpret=_interpret()).reshape(-1)

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (device count locks at
+first init), which is why this module must never be imported by tests or the
+library — it is a CLI entry point only:
+
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --out results/dryrun   # every cell
+
+Per cell it:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod);
+  2. builds the step fn (train_step / prefill / decode per the shape kind)
+     with full FSDPxTP shardings and abstract (ShapeDtypeStruct) inputs;
+  3. ``.lower().compile()`` at FULL depth — the pass/fail gate; records
+     ``memory_analysis()`` (per-device fit) and raw ``cost_analysis()``;
+  4. runs the trip-count-aware HLO cost model (launch/hlo_cost.py) over the
+     compiled text — XLA's own cost analysis counts while bodies once, so
+     scan-over-layers/chunks programs need the corrected walk — giving
+     per-device FLOPs / fusion-boundary bytes / collective bytes;
+  5. writes one JSON per cell under --out (resumable: existing files skip).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+
+def _build(arch: str, shape_name: str, multi_pod: bool, *, depth_override=None,
+           compressed_grads: bool = False, microbatches: int = 1,
+           opt: str = "none"):
+    import jax
+    from repro.models import attention as _attn
+    from repro.models import nn as _nn
+    from repro.dist import sharding as _shd
+    _nn.set_bf16_matmul_output("bf16" in opt)
+    _shd.set_profile("zero3" if "zero3" in opt else "tp")
+    _attn.set_causal_skip("cskip" in opt)
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.dist.compressed_allreduce import GradCompressionConfig
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import zoo
+    from repro.optim import adamw_init
+    from repro.train.step import TrainConfig, build_decode_step, build_prefill_step, build_train_step
+
+    cfg = configs.get(arch)
+    if depth_override is not None:
+        if cfg.shared_attn_every:   # zamba2: depth knob = superblock count
+            depth_override = depth_override * cfg.shared_attn_every
+        cfg = dataclasses.replace(cfg, n_layers=depth_override)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = zoo.build(cfg)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            microbatches=microbatches,
+            grad_compress=GradCompressionConfig(enabled=compressed_grads))
+        step, info = build_train_step(model, shape, mesh, tcfg)
+        params_abs = model.abstract_params()
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        err_abs = jax.eval_shape(info["make_err_state"], params_abs)
+        args = (params_abs, opt_abs, err_abs,
+                jax.ShapeDtypeStruct((), jax.numpy.int32), info["input_structs"])
+    elif shape.kind == "prefill":
+        step, info = build_prefill_step(model, shape, mesh)
+        args = (model.abstract_params(), info["input_structs"])
+    else:  # decode
+        step, info = build_decode_step(model, shape, mesh)
+        args = (model.abstract_params(), info["cache_structs"], info["input_structs"])
+    return model, mesh, step, args
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             compressed_grads: bool = False, microbatches: int = 1,
+             opt: str = "none") -> dict:
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.launch import hlo_analysis as ha
+    from repro.launch import hlo_cost
+
+    multi_pod = mesh_name == "multi"
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "compressed_grads": compressed_grads, "microbatches": microbatches,
+              "opt": opt}
+    shape = SHAPES[shape_name]
+
+    # --- full-depth compile: the pass/fail gate + memory + cost model
+    model, mesh, step, args = _build(arch, shape_name, multi_pod,
+                                     compressed_grads=compressed_grads,
+                                     microbatches=microbatches, opt=opt)
+    lowered = step.lower(*args)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    dpp = 256 if multi_pod else None   # devices per pod on the (2,16,16) mesh
+    parsed = hlo_cost.analyze(text, devices_per_pod=dpp)
+    result["full"] = {
+        "memory": ha.memory_summary(mem),
+        "flops_raw_xla": cost.get("flops", 0.0),
+        "bytes_raw_xla": cost.get("bytes accessed", 0.0),
+        "hlo_text_bytes": len(text),
+    }
+    n_dev = 1
+    for v in mesh.shape.values():
+        n_dev *= v
+    result["devices"] = n_dev
+    result["param_count"] = model.param_count()
+    result["active_param_count"] = model.active_param_count()
+    result["cost_model"] = parsed
+
+    flops = parsed["flops"]
+    bytes_ = parsed["bytes"]
+    coll = parsed["collective_bytes"]
+    terms = ha.roofline_terms(flops, bytes_, coll, parsed.get("cross_pod_bytes", 0.0))
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    mf = ha.model_flops(result["active_param_count"], tokens, shape.kind)
+    terms["model_flops"] = mf
+    terms["useful_flops_ratio"] = mf / max(flops * n_dev, 1.0)
+    result["roofline"] = terms
+    result["elapsed_s"] = time.time() - t0
+    return result
+
+
+def main() -> None:
+    from repro import configs
+    from repro.configs.base import cells_for
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=list(configs.ARCH_IDS))
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--out", default=None, help="JSON output path (or dir with --all)")
+    p.add_argument("--compressed-grads", action="store_true")
+    p.add_argument("--opt", default="none",  # comma list: bf16,zero3,cskip
+                   help="beyond-paper perf variant (see EXPERIMENTS.md §Perf)")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--all", action="store_true", help="run every assigned cell")
+    args = p.parse_args()
+
+    if args.all:
+        out_dir = args.out or "results/dryrun"
+        os.makedirs(out_dir, exist_ok=True)
+        failures = []
+        for arch in configs.ARCH_IDS:
+            for shape_name in cells_for(configs.get(arch)):
+                for mesh_name in ("single", "multi"):
+                    tag = f"{arch}_{shape_name}_{mesh_name}"
+                    path = os.path.join(out_dir, tag + ".json")
+                    if os.path.exists(path):
+                        print(f"[skip] {tag}", flush=True)
+                        continue
+                    try:
+                        r = run_cell(arch, shape_name, mesh_name)
+                        with open(path, "w") as f:
+                            json.dump(r, f, indent=1)
+                        print(f"[ok]   {tag} ({r['elapsed_s']:.0f}s) "
+                              f"bottleneck={r['roofline']['bottleneck']}", flush=True)
+                    except Exception as e:
+                        failures.append((tag, repr(e)))
+                        print(f"[FAIL] {tag}: {e}", flush=True)
+                        traceback.print_exc()
+        if failures:
+            sys.exit(1)
+        return
+
+    r = run_cell(args.arch, args.shape, args.mesh,
+                 compressed_grads=args.compressed_grads,
+                 microbatches=args.microbatches, opt=args.opt)
+    mem = r.get("full", {}).get("memory")
+    if mem:
+        print("memory_analysis:", json.dumps(mem, indent=1))
+        print("cost_analysis flops (raw xla, once-per-while-body):", r["full"]["flops_raw_xla"])
+    print("cost_model:", json.dumps({k: v for k, v in r["cost_model"].items()
+                                     if k != "collective_detail"}, indent=1))
+    print("roofline:", json.dumps(r["roofline"], indent=1))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(r, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

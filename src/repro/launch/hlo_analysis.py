@@ -1,0 +1,54 @@
+"""Roofline term computation (hardware model + memory summary).
+
+Inputs come from launch/hlo_cost.py (trip-count-aware per-device FLOPs /
+dot-adjacent bytes / ring-model collective bytes with pod attribution) and
+``compiled.memory_analysis()``.
+
+Hardware model (TPU v5e targets, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, 6.25 GB/s/chip cross-pod DCN. HLO shapes in a partitioned
+module are per-device, so the terms are per-device seconds:
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = in_pod_bytes / LINK_BW + cross_pod_bytes / DCN_BW
+"""
+from __future__ import annotations
+
+from typing import Any
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI; 1 link assumed, ~4 available)
+DCN_BW = 6.25e9          # bytes/s / chip across pods (50 Gbps effective DCN)
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   cross_pod_bytes: float = 0.0) -> dict:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = coll_bytes / LINK_BW + cross_pod_bytes / DCN_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective,
+             "cross_pod_s": cross_pod_bytes / DCN_BW}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["step_time_lower_bound_s"] = bound
+    # fraction of roofline achieved if the dominant term were the only cost
+    terms["roofline_fraction_compute"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6ND for training, 2ND for forward-only (prefill/decode)."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens
+
+
+def memory_summary(mem: Any) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_device_bytes": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+    }

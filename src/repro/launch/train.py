@@ -1,0 +1,67 @@
+"""Training launcher: --arch <id> --shape <name> on any mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 20 --ckpt-dir /tmp/run1
+
+On a real fleet this process runs per host under the cluster scheduler
+(jax.distributed.initialize picks up the coordinator from the environment);
+on this box it drives the local mesh. XLA latency-hiding-scheduler flags for
+compute/communication overlap on TPU (documented here, harmless on CPU):
+
+    LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true
+        --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+        --xla_enable_async_all_gather=true"
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default=None, help="assigned shape name (defaults to a local shape)")
+    p.add_argument("--smoke", action="store_true", help="reduced config")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--model-parallel", type=int, default=1)
+    p.add_argument("--pods", type=int, default=1)
+    p.add_argument("--compressed-grads", action="store_true")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-codec", choices=["raw", "fz"], default="raw")
+    args = p.parse_args()
+
+    from repro import configs
+    from repro.configs.base import SHAPES, ShapeConfig
+    from repro.data.tokens import TokenStream
+    from repro.dist.compressed_allreduce import GradCompressionConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import zoo
+    from repro.train import TrainConfig, Trainer
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    model = zoo.build(cfg)
+    if args.shape:
+        shape = SHAPES[args.shape]
+    else:
+        shape = ShapeConfig("local", args.seq, args.batch, "train")
+    mesh = make_local_mesh(model_parallel=args.model_parallel, pods=args.pods)
+    tcfg = TrainConfig(
+        microbatches=args.microbatches, total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1),
+        grad_compress=GradCompressionConfig(enabled=args.compressed_grads))
+    stream = TokenStream(vocab_size=cfg.vocab, seq_len=shape.seq_len,
+                         global_batch=shape.global_batch, seed=0)
+    trainer = Trainer(model, shape, mesh, tcfg, stream=stream,
+                      ckpt_dir=args.ckpt_dir, ckpt_codec=args.ckpt_codec)
+    print(f"{cfg.arch_id}: {model.param_count()/1e6:.1f}M params, "
+          f"mesh={dict(mesh.shape)}, resume_step={trainer.step}")
+    hist = trainer.run(args.steps - trainer.step)
+    for m in hist[:: max(len(hist) // 10, 1)]:
+        print(f"step {m['step']:5d} loss {m['loss']:.4f} ({m['seconds']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

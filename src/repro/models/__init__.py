@@ -1,0 +1,2 @@
+from . import attention, mamba2, moe, nn, rwkv6, transformer, whisper, zamba2, zoo  # noqa: F401
+from .zoo import Model, build  # noqa: F401

@@ -1,0 +1,193 @@
+"""Attention machinery: RoPE / M-RoPE, chunked flash attention, decode path.
+
+Pure-JAX chunked attention (lax.scan over q- and kv-chunks with online
+softmax) keeps HLO size and activation memory O(chunk) at 32k contexts.
+Known cost: causal masking is applied with ``where`` rather than skipping
+upper-triangle chunk pairs, so attention HLO FLOPs are ~2x the ideal causal
+count — recorded in the roofline notes; the block-skip belongs to a TPU
+splash-attention kernel (a §Perf hillclimb item), not the reference path.
+
+Decode attention is a single-token stable-softmax gather over the KV cache;
+its sequence-sharded variant (flash-decoding with psum-combine) lives in
+dist/flash_decode.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (whisper's 1500-frame encoder
+    context is not a power of two; 1500 -> 500)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# §Perf knob: skip strictly-upper-triangle chunk pairs in causal attention.
+# The masked-`where` reference computes all nq*nk chunk pairs (~2x the ideal
+# causal FLOPs); skip mode unrolls the outer q loop (HLO grows O(nq)) and
+# scans only the <= qi kv chunks, halving attention FLOPs + dot traffic.
+_CAUSAL_SKIP = False
+
+
+def set_causal_skip(on: bool) -> None:
+    global _CAUSAL_SKIP
+    _CAUSAL_SKIP = on
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, D), pos: (B, S) int32."""
+    d2 = x.shape[-1] // 2
+    ang = pos[:, :, None].astype(jnp.float32) * rope_freqs(x.shape[-1], theta)  # (B,S,d2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :d2].astype(jnp.float32), x[..., d2:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, sections: tuple[int, int, int],
+                theta: float = 1e4) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. pos3: (B, 3, S) (t/h/w position ids); the
+    head_dim/2 frequency slots are split into ``sections`` (t,h,w), each slot
+    rotating by its section's position id."""
+    d2 = x.shape[-1] // 2
+    assert sum(sections) == d2, (sections, d2)
+    sec_of = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d2)  # (d2,)
+    pos = jnp.take_along_axis(pos3, sec_of[None, :, None].repeat(pos3.shape[0], 0),
+                              axis=1)  # -> (B, d2, S) gathering per-slot section
+    ang = pos.transpose(0, 2, 1).astype(jnp.float32) * rope_freqs(x.shape[-1], theta)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :d2].astype(jnp.float32), x[..., d2:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KVH, D) with H % KVH == 0 (GQA).
+
+    Online-softmax double scan; f32 accumulators; output (B, Sq, H, D) in
+    q.dtype.
+    """
+    from . import nn as _nn
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = D ** -0.5
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    # §Perf bf16 mode: q/k/v and the probability operand of the second dot
+    # stay bf16 (halving dot-adjacent HBM traffic and any kv replication
+    # gathers); softmax statistics and the context accumulator remain f32.
+    bf16 = _nn.bf16_matmul_output() and q.dtype == jnp.bfloat16
+    cdt = jnp.bfloat16 if bf16 else jnp.float32
+
+    qs = q.reshape(B, nq, q_chunk, KVH, G, D).astype(cdt)
+    ks = k.reshape(B, nk, kv_chunk, KVH, D).astype(cdt)
+    vs = v.reshape(B, nk, kv_chunk, KVH, D).astype(cdt)
+
+    q_pos = jnp.arange(Sq).reshape(nq, q_chunk)
+    k_pos = jnp.arange(Sk).reshape(nk, kv_chunk)
+
+    def kv_step_for(qb, qp):
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb, kp = ki
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                s = jnp.where(qp[None, :, None, None, None] >= kp[None, None, None, None, :],
+                              s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(cdt), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+        return kv_step
+
+    def init_carry():
+        return (jnp.full((B, q_chunk, KVH, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, q_chunk, KVH, G), jnp.float32),
+                jnp.zeros((B, q_chunk, KVH, G, D), jnp.float32))
+
+    if causal and _CAUSAL_SKIP and nq == nk and Sq == Sk:
+        # unrolled outer loop: q chunk qi only visits kv chunks <= qi
+        outs = []
+        for qi in range(nq):
+            qb, qp = qs[:, qi], q_pos[qi]
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step_for(qb, qp), init_carry(),
+                (ks[:, : qi + 1].swapaxes(0, 1), vs[:, : qi + 1].swapaxes(0, 1),
+                 k_pos[: qi + 1]))
+            outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        return jnp.stack(outs, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+    def q_step(_, qi):
+        qb, qp = qi  # (B, qc, KVH, G, D), (qc,)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step_for(qb, qp), init_carry(),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qs.swapaxes(0, 1), q_pos))  # (nq, B, qc, KVH, G, D)
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal=True):
+    """Naive O(S^2) oracle for tests."""
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    qf = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs. KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """q: (B, H, D); caches: (B, Smax, KVH, D); length: (B,) valid prefix.
+
+    Stable softmax over the valid prefix only. Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(k_cache.shape[1])[None, :] < length[:, None]  # (B, Smax)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    o = o / jnp.sum(p, axis=-1, keepdims=True)
+    return o.reshape(B, H, D).astype(q.dtype)

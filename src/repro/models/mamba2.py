@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) blocks — zamba2 backbone.
+
+Chunked state-space-dual algorithm: scalar per-head decay means the
+intra-chunk kernel is a (c, c) decay-masked attention-like matmul and the
+inter-chunk state is carried by a lax.scan — O(S·c) memory, exact.
+
+All decay exponents within the algorithm are <= 0 (cumulative log-decays and
+their ordered differences), so the chunked form is numerically safe in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import nn
+
+DP = "fsdp"
+TP = "tp"
+
+CHUNK = 128
+
+
+def dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    return d_inner, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_defs(cfg: ArchConfig, n_layers: int) -> dict:
+    d = cfg.d_model
+    d_inner, nh, hd, ds = dims(cfg)
+    conv_ch = d_inner + 2 * ds
+    L = n_layers
+    return {
+        "norm": nn.Param((L, d), (None, None), init="ones"),
+        "in_proj": nn.Param((L, d, 2 * d_inner + 2 * ds + nh), (None, DP, TP)),
+        "conv_w": nn.Param((L, cfg.conv_width, conv_ch), (None, None, TP), dtype=jnp.float32),
+        "conv_b": nn.Param((L, conv_ch), (None, TP), init="zeros", dtype=jnp.float32),
+        "A_log": nn.Param((L, nh), (None, TP), init="zeros", dtype=jnp.float32),
+        "dt_bias": nn.Param((L, nh), (None, TP), init="zeros", dtype=jnp.float32),
+        "D": nn.Param((L, nh), (None, TP), init="ones", dtype=jnp.float32),
+        "ssm_norm": nn.Param((L, d_inner), (None, TP), init="ones"),
+        "out_proj": nn.Param((L, d_inner, d), (None, TP, DP)),
+    }
+
+
+def _split(lp, x, cfg):
+    d_inner, nh, hd, ds = dims(cfg)
+    zxbcdt = nn.dense(x, lp["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _conv(xbc: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None):
+    """Causal depthwise conv width W via shifted adds. xbc: (B, S, C).
+    state: (B, W-1, C) trailing context (decode) or None (zero history).
+    Returns (out, new_state)."""
+    W = w.shape[0]
+    B, S, C = xbc.shape
+    hist = jnp.zeros((B, W - 1, C), xbc.dtype) if state is None else state.astype(xbc.dtype)
+    ext = jnp.concatenate([hist, xbc], axis=1)  # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        out = out + ext[:, i:i + S].astype(jnp.float32) * w[i]
+    new_state = ext[:, S:]  # last W-1 inputs
+    return jax.nn.silu(out + b).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(xh, bmat, cmat, dt, A_log, D, h0):
+    """Chunked SSD scan.
+
+    xh: (B,S,nh,hd); bmat/cmat: (B,S,ds); dt: (B,S,nh) raw; h0: (B,nh,hd,ds).
+    Returns (y (B,S,nh,hd), h_final).
+    """
+    B, S, nh, hd = xh.shape
+    ds = bmat.shape[-1]
+    c = min(CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        # state-neutral padding: dt -> -30 makes softplus(dt) ~ 0 (no decay,
+        # no input contribution); padded outputs sliced off below
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        S = S + pad
+    n = S // c
+    dt = jax.nn.softplus(dt.astype(jnp.float32))            # (B,S,nh)
+    la = -jnp.exp(A_log)[None, None, :] * dt                 # log decay, <= 0
+    xf = (xh.astype(jnp.float32) * dt[..., None]).reshape(B, n, c, nh, hd)
+    bf = bmat.astype(jnp.float32).reshape(B, n, c, ds)
+    cf = cmat.astype(jnp.float32).reshape(B, n, c, ds)
+    laf = la.reshape(B, n, c, nh)
+
+    def chunk_step(h, inp):
+        xc, bc, cc, lac = inp  # (B,c,nh,hd), (B,c,ds), (B,c,ds), (B,c,nh)
+        La = jnp.cumsum(lac, axis=1)                         # (B,c,nh) inclusive
+        # intra-chunk: decay-masked attention
+        diff = La[:, :, None, :] - La[:, None, :, :]         # (B,c,c,nh) t,s
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        M = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        score = jnp.einsum("btd,bsd->bts", cc, bc)           # (B,c,c)
+        y = jnp.einsum("bts,btsh,bshe->bthe", score, M, xc)  # (B,c,nh,hd)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("btd,bth,bhed->bthe", cc, jnp.exp(La), h)
+        # state update
+        decay_to_end = jnp.exp(La[:, -1:, :] - La)           # (B,c,nh)
+        dh = jnp.einsum("bsh,bshe,bsd->bhed", decay_to_end, xc, bc)
+        h = jnp.exp(La[:, -1])[:, :, None, None] * h + dh
+        return h, y
+
+    h, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32),
+                         (xf.swapaxes(0, 1), bf.swapaxes(0, 1),
+                          cf.swapaxes(0, 1), laf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, S, nh, hd)
+    y = y + xh.astype(jnp.float32) * D[None, None, :, None]
+    return y, h
+
+
+def mamba_block(lp: dict, x: jax.Array, cfg: ArchConfig,
+                ssm_state=None, conv_state=None):
+    """One Mamba2 block. x: (B, S, d). Returns (out, (ssm_state, conv_state))."""
+    B, S, d = x.shape
+    d_inner, nh, hd, ds = dims(cfg)
+    h = nn.rms_norm(x, lp["norm"], cfg.norm_eps)
+    z, xbc, dt = _split(lp, h, cfg)
+    xbc, conv_state = _conv(xbc, lp["conv_w"], lp["conv_b"], conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    xh = xs.reshape(B, S, nh, hd)
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32) if ssm_state is None else ssm_state
+    y, h_final = _ssd_chunked(xh, bmat, cmat, dt, lp["A_log"], lp["D"], h0)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = nn.rms_norm(y, lp["ssm_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + nn.dense(y, lp["out_proj"]), (h_final, conv_state)
+
+
+def mamba_decode_step(lp: dict, x: jax.Array, cfg: ArchConfig, ssm_state, conv_state):
+    """Single-token recurrence. x: (B, d). States as in mamba_block."""
+    B, d = x.shape
+    d_inner, nh, hd, ds = dims(cfg)
+    h = nn.rms_norm(x[:, None], lp["norm"], cfg.norm_eps)
+    z, xbc, dt = _split(lp, h, cfg)
+    xbc, conv_state = _conv(xbc, lp["conv_w"], lp["conv_b"], conv_state)
+    xs, bmat, cmat = jnp.split(xbc[:, 0], [d_inner, d_inner + ds], axis=-1)
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32))      # (B,nh)
+    a = jnp.exp(-jnp.exp(lp["A_log"])[None] * dtf)           # (B,nh)
+    upd = jnp.einsum("bhe,bd->bhed", xh * dtf[..., None], bmat.astype(jnp.float32))
+    ssm_state = a[:, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bd,bhed->bhe", cmat.astype(jnp.float32), ssm_state)
+    y = y + xh * lp["D"][None, :, None]
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = nn.rms_norm(y, lp["ssm_norm"], cfg.norm_eps) * jax.nn.silu(z[:, 0])
+    return x + nn.dense(y, lp["out_proj"]), (ssm_state, conv_state)

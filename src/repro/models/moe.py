@@ -1,0 +1,79 @@
+"""Mixture-of-Experts FFN (dbrx 16e/top-4, llama4-scout 16e/top-1).
+
+GSPMD-style grouped dispatch/combine einsums with capacity limiting:
+tokens are partitioned into groups (one group per data shard at production
+batch sizes), each group dispatches into per-expert capacity slots
+C = ceil(g * top_k * cf / E); overflow tokens drop (standard Switch-style).
+
+Expert weights are sharded on the model axis (EP); dispatch tensors are
+sharded on the data axis by construction of the grouping, so the all-to-all
+pattern materializes as XLA-inserted collectives over the einsums.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import nn
+
+DP = "fsdp"
+TP = "tp"
+
+GROUP_TOKENS = 2048
+
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    L, d, f, E = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": nn.Param((L, d, E), (None, DP, None), dtype=jnp.float32),
+        "we_gate": nn.Param((L, E, d, f), (None, TP, DP, None)),
+        "we_up": nn.Param((L, E, d, f), (None, TP, DP, None)),
+        "we_down": nn.Param((L, E, f, d), (None, TP, None, DP)),
+    }
+
+
+def _group_size(T: int) -> int:
+    g = min(GROUP_TOKENS, T)
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe_apply(lp: dict, h: jax.Array, cfg: ArchConfig):
+    """h: (B, S, d) -> (out (B, S, d), aux load-balance loss)."""
+    B, S, d = h.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    T = B * S
+    g = _group_size(T)
+    G = T // g
+    C = max(1, int(g * k * cf / E))
+
+    x = h.reshape(G, g, d)
+    scores = jax.nn.softmax(nn.dense(x, lp["router"]).astype(jnp.float32), axis=-1)  # (G,g,E)
+    vals, idx = jax.lax.top_k(scores, k)                       # (G,g,k)
+    vals = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
+    m = jax.nn.one_hot(idx, E, dtype=jnp.float32)              # (G,g,k,E)
+
+    # position of each (token, slot) within its expert's capacity
+    flat = m.reshape(G, g * k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, k, E)
+    pos = jnp.sum(pos * m, axis=-1)                            # (G,g,k)
+    keep = (pos < C).astype(jnp.float32)
+    oh_pos = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]  # (G,g,k,C)
+
+    dispatch = jnp.einsum("gtke,gtkc->gtec", m, oh_pos)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", vals, m, oh_pos)
+
+    xin = jnp.einsum("gtec,gtd->egcd", dispatch.astype(h.dtype), x)      # (E,G,C,d)
+    h1 = jnp.einsum("egcd,edf->egcf", xin, lp["we_gate"].astype(h.dtype))
+    h2 = jnp.einsum("egcd,edf->egcf", xin, lp["we_up"].astype(h.dtype))
+    act = jax.nn.silu(h1) * h2
+    out_e = jnp.einsum("egcf,efd->egcd", act, lp["we_down"].astype(h.dtype))
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(h.dtype), out_e)
+
+    # Switch-style load-balance loss
+    frac_tokens = jnp.mean(m.sum(2), axis=1)                   # (G,E)
+    frac_probs = jnp.mean(scores, axis=1)                      # (G,E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return y.reshape(B, S, d), aux

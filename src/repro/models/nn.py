@@ -1,0 +1,167 @@
+"""Minimal functional NN substrate: pytree params + logical sharding specs.
+
+No flax/haiku on this box, so the framework carries its own module system:
+
+  * a model is a pair of pure functions over a nested-dict param pytree;
+  * every parameter is declared as a :class:`Param` (shape, dtype, init,
+    *logical* axis names); ``init_tree`` materializes arrays, ``spec_tree``
+    materializes the matching PartitionSpec pytree;
+  * logical axes ("fsdp", "tp", None) are resolved against a concrete mesh by
+    dist/sharding.py, with replicate-if-indivisible fallbacks, so the same
+    model definition runs on a laptop mesh and the (pod, data, model)
+    production mesh.
+
+Layers are stacked [L, ...] and applied with lax.scan so compiled HLO size is
+independent of depth (critical for 88-layer dry-runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+#
+# Model code is mesh-agnostic; the step builder installs a sharder that
+# resolves logical axes ("dp"/"tp") against the concrete mesh. Without these
+# constraints the auto-partitioner is free to pick batch-replicated layouts
+# (observed: full-batch f32 FFN partial-sum all-reduces over the FSDP axis).
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDER: Callable[[jax.Array, tuple], jax.Array] | None = None
+
+# Matmul output precision policy (§Perf optimization, default = baseline):
+# f32 dot outputs put the TP partial-sum all-reduces and all flash-attention
+# score/context tensors on the wire/HBM in 4 bytes; bf16 outputs halve both
+# (MXU accumulation stays f32 internally on TPU). Set by the step builders /
+# dry-run --opt flag so baseline and optimized variants are both measurable.
+_BF16_MATMUL_OUT = False
+
+
+def set_bf16_matmul_output(on: bool) -> None:
+    global _BF16_MATMUL_OUT
+    _BF16_MATMUL_OUT = on
+
+
+def bf16_matmul_output() -> bool:
+    return _BF16_MATMUL_OUT
+
+
+def set_act_sharder(fn: Callable[[jax.Array, tuple], jax.Array] | None) -> None:
+    global _ACT_SHARDER
+    _ACT_SHARDER = fn
+
+
+def shard_act(x: jax.Array, logical: tuple) -> jax.Array:
+    """Apply an activation sharding constraint (identity when no mesh)."""
+    if _ACT_SHARDER is None:
+        return x
+    return _ACT_SHARDER(x, logical)
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]      # logical axis per dim: "fsdp"|"tp"|None
+    init: str = "normal"                 # "normal"|"zeros"|"ones"|"embed"|"scaled"
+    dtype: Any = jnp.bfloat16
+    fan_in_axes: tuple[int, ...] | None = None  # for "scaled": which dims are fan-in
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            return (jax.random.normal(key, self.shape, jnp.float32) * 0.02).astype(self.dtype)
+        if self.init in ("normal", "scaled"):
+            fan_axes = self.fan_in_axes
+            if fan_axes is None:
+                fan_axes = (len(self.shape) - 2,) if len(self.shape) >= 2 else (0,)
+            fan_in = 1
+            for a in fan_axes:
+                fan_in *= self.shape[a]
+            std = (2.0 / max(fan_in, 1)) ** 0.5 if self.init == "scaled" else fan_in ** -0.5
+            return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(self.dtype)
+        raise ValueError(f"unknown init {self.init!r}")
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def init_tree(defs: Any, key: jax.Array) -> Any:
+    """Materialize a nested dict of Param declarations into arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [p.materialize(k) for p, k in zip(leaves, keys)])
+
+
+def spec_tree(defs: Any) -> Any:
+    """Matching pytree of logical-axis tuples (resolved to PartitionSpec later)."""
+    return jax.tree.map(lambda p: p.logical, defs, is_leaf=is_param)
+
+
+def param_count(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Stateless layer math
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., d_in) @ w (d_in, d_out) in the param dtype, f32 accumulation."""
+    pref = (jnp.bfloat16 if (_BF16_MATMUL_OUT and x.dtype == jnp.bfloat16)
+            else jnp.float32)
+    return jax.lax.dot_general(x, w.astype(x.dtype),
+                               (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=pref).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    return dense(jax.nn.silu(dense(x, w_gate)) * dense(x, w_up), w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up: jax.Array,
+             w_down: jax.Array, b_down: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(dense(x, w_up) + b_up.astype(x.dtype))
+    return dense(h, w_down) + b_down.astype(x.dtype)
+
+
+def embed_lookup(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather-based embedding (vocab sharded on tp -> XLA turns this into
+    a masked one-hot + psum under SPMD; fine for the dry-run)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def sharded_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean cross entropy, numerically stable in f32.
+
+    Written with plain reductions so XLA inserts the tp-axis collectives for
+    vocab-sharded logits automatically.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

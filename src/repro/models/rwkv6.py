@@ -1,0 +1,249 @@
+"""RWKV-6 "Finch": attention-free with data-dependent per-channel decay.
+
+Time-mix WKV state is per head S in R^{hd x hd}:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,      w_t = exp(-exp(lora(x_t)))
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Chunked evaluation (chunk c=16): within a chunk the pairwise decay factors
+exp(La[t-1] - La[s]) (s <= t-1, cumulative log-decay La) are formed as an
+explicit (c, c, hd) tensor — exponents are ordered differences of a
+monotonically decreasing sequence, hence <= 0 and exp is safe/exact in f32.
+This is the TPU-shaped analogue of FLA's tiled CUDA kernels; c=16 keeps the
+pairwise tensor small and MXU-aligned.
+
+Simplifications vs. the full release (faithfulness ledger, DESIGN.md):
+static learned token-shift mixing coefficients (RWKV-5 style) for r/k/v/g;
+the decay w keeps its full data-dependent LoRA (the Finch hallmark).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import nn
+
+DP = "fsdp"
+TP = "tp"
+
+CHUNK = 16
+LORA_R = 64
+
+
+def dims(cfg: ArchConfig):
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv_defs(cfg: ArchConfig) -> dict:
+    L, d = cfg.n_layers, cfg.d_model
+    nh, hd = dims(cfg)
+    return {
+        "ln_att": nn.Param((L, d), (None, None), init="ones"),
+        "mix_r": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "mix_k": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "mix_v": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "mix_g": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "mix_w": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "wr": nn.Param((L, d, d), (None, DP, TP)),
+        "wk": nn.Param((L, d, d), (None, DP, TP)),
+        "wv": nn.Param((L, d, d), (None, DP, TP)),
+        "wg": nn.Param((L, d, d), (None, DP, TP)),
+        "w_base": nn.Param((L, d), (None, TP), init="zeros", dtype=jnp.float32),
+        "w_lora_a": nn.Param((L, d, LORA_R), (None, DP, None)),
+        "w_lora_b": nn.Param((L, LORA_R, d), (None, None, TP), init="zeros"),
+        "bonus_u": nn.Param((L, nh, hd), (None, TP, None), init="zeros", dtype=jnp.float32),
+        "ln_out": nn.Param((L, d), (None, TP), init="ones"),
+        "wo": nn.Param((L, d, d), (None, TP, DP)),
+        "ln_ffn": nn.Param((L, d), (None, None), init="ones"),
+        "mix_fk": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "mix_fr": nn.Param((L, d), (None, None), init="zeros", dtype=jnp.float32),
+        "fk": nn.Param((L, d, cfg.d_ff), (None, DP, TP)),
+        "fv": nn.Param((L, cfg.d_ff, d), (None, TP, DP)),
+        "fr": nn.Param((L, d, d), (None, DP, TP)),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Token shift: x_{t-1} with carry-in ``prev`` (B, d) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x, xp, mu):
+    m = jax.nn.sigmoid(mu)[None, None, :]
+    return (x.astype(jnp.float32) * m + xp.astype(jnp.float32) * (1 - m)).astype(x.dtype)
+
+
+def _wkv_chunked(r, k, v, la, u, s0):
+    """r/k/v: (B,S,nh,hd); la: (B,S,nh,hd) log-decay (<=0); u: (nh,hd);
+    s0: (B,nh,hd,hd). Returns (o (B,S,nh,hd), s_final)."""
+    B, S, nh, hd = r.shape
+    c = min(CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        # state-neutral padding: k=0 contributes nothing, log-decay 0 keeps
+        # the state unchanged; padded outputs are sliced off below
+        zero = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, la = zero(r), zero(k), zero(v), zero(la)
+        S = S + pad
+    n = S // c
+    rs = r.astype(jnp.float32).reshape(B, n, c, nh, hd)
+    ks = k.astype(jnp.float32).reshape(B, n, c, nh, hd)
+    vs = v.astype(jnp.float32).reshape(B, n, c, nh, hd)
+    las = la.reshape(B, n, c, nh, hd)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, lac = inp  # (B,c,nh,hd)
+        La = jnp.cumsum(lac, axis=1)                         # inclusive
+        La_ex = La - lac                                     # exclusive (= La[t-1])
+        # inter-chunk: o_t += (r_t * exp(La_ex[t])) @ s
+        r_dec = rc * jnp.exp(La_ex)
+        o = jnp.einsum("bthd,bhde->bthe", r_dec, s)
+        # intra-chunk strict lower triangle, pairwise per channel
+        diff = La_ex[:, :, None] - La[:, None, :]            # (B,t,s,nh,hd)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        P = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        score = jnp.einsum("bthd,bshd,btshd->btsh", rc, kc, P)
+        o = o + jnp.einsum("btsh,bshe->bthe", score, vc)
+        # current-token bonus
+        diag = jnp.einsum("bthd,hd,bthd->bth", rc, u, kc)
+        o = o + diag[..., None] * vc
+        # carry state to chunk end
+        decay_to_end = jnp.exp(La[:, -1:] - La)              # (B,c,nh,hd)
+        s = jnp.exp(La[:, -1])[..., None] * s + \
+            jnp.einsum("bshd,bshe->bhde", kc * decay_to_end, vc)
+        return s, o
+
+    s, os_ = jax.lax.scan(chunk_step, s0.astype(jnp.float32),
+                          (rs.swapaxes(0, 1), ks.swapaxes(0, 1),
+                           vs.swapaxes(0, 1), las.swapaxes(0, 1)))
+    out = os_.swapaxes(0, 1).reshape(B, S, nh, hd)
+    return (out[:, : S - pad] if pad else out), s
+
+
+def _decay_log(lp, xw: jax.Array) -> jax.Array:
+    """Data-dependent log-decay (<= 0): -exp(base + lora(x))."""
+    lora = nn.dense(jnp.tanh(nn.dense(xw, lp["w_lora_a"])), lp["w_lora_b"])
+    return -jnp.exp(jnp.clip(lp["w_base"][None, None] + lora.astype(jnp.float32), -8.0, 4.0))
+
+
+def time_mix(lp, x, cfg, wkv_state=None, shift_state=None):
+    """x: (B,S,d) -> (out, (wkv_state, last_token))."""
+    B, S, d = x.shape
+    nh, hd = dims(cfg)
+    h = nn.layer_norm(x, lp["ln_att"], jnp.zeros_like(lp["ln_att"]), cfg.norm_eps)
+    hp = _shift(h, shift_state)
+    r = nn.dense(_mix(h, hp, lp["mix_r"]), lp["wr"]).reshape(B, S, nh, hd)
+    k = nn.dense(_mix(h, hp, lp["mix_k"]), lp["wk"]).reshape(B, S, nh, hd)
+    v = nn.dense(_mix(h, hp, lp["mix_v"]), lp["wv"]).reshape(B, S, nh, hd)
+    g = nn.dense(_mix(h, hp, lp["mix_g"]), lp["wg"])
+    la = _decay_log(lp, _mix(h, hp, lp["mix_w"])).reshape(B, S, nh, hd)
+    s0 = jnp.zeros((B, nh, hd, hd), jnp.float32) if wkv_state is None else wkv_state
+    o, s = _wkv_chunked(r, k, v, la, lp["bonus_u"], s0)
+    o = o.reshape(B, S, d).astype(x.dtype)
+    o = nn.rms_norm(o, lp["ln_out"], cfg.norm_eps) * jax.nn.silu(g)
+    return x + nn.dense(o, lp["wo"]), (s, h[:, -1])
+
+
+def channel_mix(lp, x, cfg, shift_state=None):
+    h = nn.layer_norm(x, lp["ln_ffn"], jnp.zeros_like(lp["ln_ffn"]), cfg.norm_eps)
+    hp = _shift(h, shift_state)
+    kx = _mix(h, hp, lp["mix_fk"])
+    rx = _mix(h, hp, lp["mix_fr"])
+    kk = jnp.square(jax.nn.relu(nn.dense(kx, lp["fk"])))
+    out = jax.nn.sigmoid(nn.dense(rx, lp["fr"])) * nn.dense(kk, lp["fv"])
+    return x + out, h[:, -1]
+
+
+def rwkv_block(lp, x, cfg, states=None):
+    """states: (wkv, att_shift, ffn_shift) or None."""
+    wkv, sh_a, sh_f = states if states is not None else (None, None, None)
+    x, (wkv, sh_a) = time_mix(lp, x, cfg, wkv, sh_a)
+    x, sh_f = channel_mix(lp, x, cfg, sh_f)
+    return x, (wkv, sh_a, sh_f)
+
+
+def rwkv_decode_step(lp, x, cfg, states):
+    """Single token: x (B, d); exact recurrence via the chunked path with S=1."""
+    wkv, sh_a, sh_f = states
+    y, (wkv, sh_a) = time_mix(lp, x[:, None], cfg, wkv, sh_a)
+    y, sh_f = channel_mix(lp, y, cfg, sh_f)
+    return y[:, 0], (wkv, sh_a, sh_f)
+
+
+# ---------------------------------------------------------------------------
+# Full-model wrappers (embed + blocks + head)
+# ---------------------------------------------------------------------------
+
+def model_defs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": nn.Param((cfg.vocab, cfg.d_model), (None, TP), init="embed"),
+        "ln0": nn.Param((cfg.d_model,), (None,), init="ones"),
+        "blocks": rwkv_defs(cfg),
+        "final_norm": nn.Param((cfg.d_model,), (None,), init="ones"),
+        "unembed": nn.Param((cfg.d_model, cfg.vocab), (DP, TP)),
+    }
+
+
+def forward_train(params, cfg: ArchConfig, batch):
+    tokens = batch["tokens"]
+    x = nn.rms_norm(nn.embed_lookup(tokens, params["embed"]), params["ln0"], cfg.norm_eps)
+    x = nn.shard_act(x, ("dp", None, None))
+
+    def body(x, lp):
+        y, _ = rwkv_block(lp, x, cfg)
+        return nn.shard_act(y, ("dp", None, None)), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    loss = nn.sharded_xent(logits, batch["labels"])
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int, dtype=jnp.bfloat16) -> dict:
+    nh, hd = dims(cfg)
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        "wkv": jnp.zeros((L, B, nh, hd, hd), jnp.float32),
+        "sh_a": jnp.zeros((L, B, d), jnp.float32),
+        "sh_f": jnp.zeros((L, B, d), jnp.float32),
+        "length": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def forward_prefill(params, cfg: ArchConfig, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = nn.rms_norm(nn.embed_lookup(tokens, params["embed"]), params["ln0"], cfg.norm_eps)
+    x = nn.shard_act(x, ("dp", None, None))
+
+    def body(x, lp):
+        y, (wkv, sh_a, sh_f) = rwkv_block(lp, x, cfg)
+        return (nn.shard_act(y, ("dp", None, None)),
+                (wkv, sh_a.astype(jnp.float32), sh_f.astype(jnp.float32)))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (wkvs, sas, sfs) = jax.lax.scan(body_fn, x, params["blocks"])
+    x = nn.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    cache = {"wkv": wkvs, "sh_a": sas, "sh_f": sfs,
+             "length": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def forward_decode(params, cfg: ArchConfig, cache, token, positions=None):
+    x = nn.rms_norm(nn.embed_lookup(token, params["embed"]), params["ln0"], cfg.norm_eps)
+
+    def body(x, inp):
+        lp, wkv, sa, sf = inp
+        y, (wkv, sa, sf) = rwkv_decode_step(lp, x, cfg, (wkv, sa, sf))
+        return y, (wkv, sa.astype(jnp.float32), sf.astype(jnp.float32))
+
+    x, (wkvs, sas, sfs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["sh_a"], cache["sh_f"]))
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    return logits, {"wkv": wkvs, "sh_a": sas, "sh_f": sfs, "length": cache["length"] + 1}

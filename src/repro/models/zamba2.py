@@ -1,0 +1,206 @@
+"""Zamba2: Mamba2 backbone + a weight-SHARED attention block every K layers.
+
+Structure (per the Zamba2 papers, simplified to systems-relevant shape):
+the backbone is ``n_layers`` Mamba2 blocks; before every
+``shared_attn_every``-th group, one shared transformer block (attention +
+SwiGLU MLP, ONE set of weights reused at every invocation) runs on
+concat(hidden, original embedding) projected back to d_model by a
+per-invocation linear. KV caches exist per invocation site (weights are
+shared; caches are not).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import mamba2, nn
+from .attention import apply_rope, decode_attention, flash_attention
+
+DP = "fsdp"
+TP = "tp"
+
+
+def n_invocations(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    K = n_invocations(cfg)
+    shared = {
+        "attn_norm": nn.Param((d,), (None,), init="ones"),
+        "wq": nn.Param((d, cfg.n_heads * hd), (DP, TP)),
+        "wk": nn.Param((d, cfg.n_kv_heads * hd), (DP, TP)),
+        "wv": nn.Param((d, cfg.n_kv_heads * hd), (DP, TP)),
+        "wo": nn.Param((cfg.n_heads * hd, d), (TP, DP)),
+        "mlp_norm": nn.Param((d,), (None,), init="ones"),
+        "w_gate": nn.Param((d, cfg.d_ff), (DP, TP)),
+        "w_up": nn.Param((d, cfg.d_ff), (DP, TP)),
+        "w_down": nn.Param((cfg.d_ff, d), (TP, DP)),
+    }
+    return {
+        "embed": nn.Param((cfg.vocab, cfg.d_model), (None, TP), init="embed"),
+        "shared": shared,
+        "fuse_proj": nn.Param((K, 2 * d, d), (None, DP, TP)),
+        "mamba": mamba2.mamba_defs(cfg, cfg.n_layers),
+        "final_norm": nn.Param((d,), (None,), init="ones"),
+        "unembed": nn.Param((d, cfg.vocab), (DP, TP)),
+    }
+
+
+def _shared_block_train(sp, h, cfg, pos):
+    B, S, _ = h.shape
+    hd = cfg.hd
+    a = nn.rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+    q = apply_rope(nn.dense(a, sp["wq"]).reshape(B, S, cfg.n_heads, hd), pos, cfg.rope_theta)
+    k = apply_rope(nn.dense(a, sp["wk"]).reshape(B, S, cfg.n_kv_heads, hd), pos, cfg.rope_theta)
+    v = nn.dense(a, sp["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    o = flash_attention(q, k, v, causal=True)
+    h = h + nn.dense(o.reshape(B, S, -1), sp["wo"])
+    m = nn.rms_norm(h, sp["mlp_norm"], cfg.norm_eps)
+    return h + nn.swiglu(m, sp["w_gate"], sp["w_up"], sp["w_down"]), (k, v)
+
+
+def _stack_mamba(params_mamba: dict, K: int):
+    """(L, ...) stacked mamba params -> (K, per, ...) for the superblock scan."""
+    return jax.tree.map(lambda a: a.reshape((K, a.shape[0] // K) + a.shape[1:]), params_mamba)
+
+
+def forward_train(params, cfg: ArchConfig, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    K = n_invocations(cfg)
+    x = nn.shard_act(nn.embed_lookup(tokens, params["embed"]), ("dp", None, None))
+    e0 = x
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    sp = params["shared"]
+    mamba_k = _stack_mamba(params["mamba"], K)
+
+    def superblock(x, inp):
+        fuse, mp = inp
+        x = nn.shard_act(x, ("dp", None, None))
+        h = nn.dense(jnp.concatenate([x, e0], axis=-1), fuse)
+        h, _ = _shared_block_train(sp, h, cfg, pos)
+        x = x + h
+
+        def mamba_step(x, lp):
+            y, _ = mamba2.mamba_block(lp, x, cfg)
+            return nn.shard_act(y, ("dp", None, None)), None
+
+        x, _ = jax.lax.scan(mamba_step, x, mp)
+        return x, None
+
+    sb = jax.checkpoint(superblock) if cfg.remat else superblock
+    x, _ = jax.lax.scan(sb, x, (params["fuse_proj"], mamba_k))
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    loss = nn.sharded_xent(logits, batch["labels"])
+    return loss, {"xent": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, B: int, S: int, dtype=jnp.bfloat16) -> dict:
+    from .transformer import cache_len
+    K = n_invocations(cfg)
+    d_inner, nh, hd_s, ds = mamba2.dims(cfg)
+    Smax = cache_len(S)
+    return {
+        "k": jnp.zeros((K, B, Smax, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((K, B, Smax, cfg.n_kv_heads, cfg.hd), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, B, nh, hd_s, ds), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, B, cfg.conv_width - 1, d_inner + 2 * ds), jnp.float32),
+        "length": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def forward_prefill(params, cfg: ArchConfig, batch):
+    from .transformer import cache_len
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    K = n_invocations(cfg)
+    Smax = cache_len(S)
+    x = nn.shard_act(nn.embed_lookup(tokens, params["embed"]), ("dp", None, None))
+    e0 = x
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    sp = params["shared"]
+    mamba_k = _stack_mamba(params["mamba"], K)
+
+    def superblock(x, inp):
+        fuse, mp = inp
+        h = nn.dense(jnp.concatenate([x, e0], axis=-1), fuse)
+        h, (k, v) = _shared_block_train(sp, h, cfg, pos)
+        x = x + h
+
+        def mamba_step(x, lp):
+            y, (ssm, conv) = mamba2.mamba_block(lp, x, cfg)
+            return y, (ssm, conv)
+
+        x, (ssms, convs) = jax.lax.scan(mamba_step, x, mp)
+        pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+        return x, (jnp.pad(k, pad).astype(jnp.bfloat16),
+                   jnp.pad(v, pad).astype(jnp.bfloat16), ssms, convs)
+
+    sb = jax.checkpoint(superblock) if cfg.remat else superblock
+    x, (ks, vs, ssms, convs) = jax.lax.scan(sb, x, (params["fuse_proj"], mamba_k))
+    x = nn.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    L = cfg.n_layers
+    cache = {"k": ks, "v": vs,
+             "ssm": ssms.reshape((L,) + ssms.shape[2:]),
+             "conv": convs.reshape((L,) + convs.shape[2:]),
+             "length": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def forward_decode(params, cfg: ArchConfig, cache, token, positions=None):
+    B = token.shape[0]
+    K = n_invocations(cfg)
+    per = cfg.shared_attn_every
+    x = nn.embed_lookup(token, params["embed"])
+    e0 = x
+    length = cache["length"]
+    pos = length[:, None]
+    sp = params["shared"]
+    mamba_k = _stack_mamba(params["mamba"], K)
+    ssm_k = cache["ssm"].reshape((K, per) + cache["ssm"].shape[1:])
+    conv_k = cache["conv"].reshape((K, per) + cache["conv"].shape[1:])
+    hd = cfg.hd
+
+    def superblock(x, inp):
+        fuse, mp, kc, vc, ssm_p, conv_p = inp
+        h = nn.dense(jnp.concatenate([x, e0], axis=-1), fuse)
+        a = nn.rms_norm(h[:, None], sp["attn_norm"], cfg.norm_eps)
+        q = apply_rope(nn.dense(a, sp["wq"]).reshape(B, 1, cfg.n_heads, hd), pos, cfg.rope_theta)
+        k = apply_rope(nn.dense(a, sp["wk"]).reshape(B, 1, cfg.n_kv_heads, hd), pos, cfg.rope_theta)
+        v = nn.dense(a, sp["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        onehot = (jnp.arange(kc.shape[1])[None, :] == length[:, None])
+        kc = jnp.where(onehot[:, :, None, None], k[:, 0][:, None].astype(kc.dtype), kc)
+        vc = jnp.where(onehot[:, :, None, None], v[:, 0][:, None].astype(vc.dtype), vc)
+        o = decode_attention(q[:, 0], kc, vc, length + 1)
+        h = h + nn.dense(o.reshape(B, -1), sp["wo"])
+        m = nn.rms_norm(h[:, None], sp["mlp_norm"], cfg.norm_eps)
+        h = h + nn.swiglu(m, sp["w_gate"], sp["w_up"], sp["w_down"])[:, 0]
+        x = x + h
+
+        def mamba_step(x, inp2):
+            lp, ssm, conv = inp2
+            y, (ssm, conv) = mamba2.mamba_decode_step(lp, x, cfg, ssm, conv)
+            return y, (ssm, conv)
+
+        x, (ssms, convs) = jax.lax.scan(mamba_step, x, (mp, ssm_p, conv_p))
+        return x, (kc, vc, ssms, convs)
+
+    x, (ks, vs, ssms, convs) = jax.lax.scan(
+        superblock, x, (params["fuse_proj"], mamba_k, cache["k"], cache["v"], ssm_k, conv_k))
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    L = cfg.n_layers
+    new_cache = {"k": ks, "v": vs,
+                 "ssm": ssms.reshape((L,) + ssms.shape[2:]),
+                 "conv": convs.reshape((L,) + convs.shape[2:]),
+                 "length": length + 1}
+    return logits, new_cache

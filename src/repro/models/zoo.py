@@ -1,0 +1,160 @@
+"""Uniform model API over all assigned architecture families.
+
+``Model`` bundles the family's init/apply functions behind one interface:
+
+    model = zoo.build(cfg)
+    params = model.init(key)
+    loss, aux = model.train_loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode(params, cache, token)
+    specs = model.input_specs(shape)       # ShapeDtypeStructs + logical shardings
+
+``input_specs`` implements the brief's stub rule: vlm/audio frontends supply
+precomputed embeddings / position ids as inputs rather than raw pixels/audio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import nn, rwkv6, transformer, whisper, zamba2
+
+DP = "dp"    # batch/activation axis -> ("pod", "data")
+TP = "tp"
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    defs: Callable[[], dict]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    make_cache: Callable[..., dict]
+
+    def init(self, key: jax.Array) -> dict:
+        return nn.init_tree(self.defs(), key)
+
+    def param_specs(self) -> dict:
+        return nn.spec_tree(self.defs())
+
+    def abstract_params(self) -> dict:
+        return jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), self.defs(),
+            is_leaf=nn.is_param)
+
+    def param_count(self) -> int:
+        import math
+        return sum(math.prod(p.shape)
+                   for p in jax.tree.leaves(self.defs(), is_leaf=nn.is_param))
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+        import math
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.n_experts:
+            return total
+        defs = self.defs()
+        expert = sum(math.prod(p.shape)
+                     for name, p in defs["layers"].items()
+                     if name in ("we_gate", "we_up", "we_down"))
+        return total - expert + expert * cfg.top_k // cfg.n_experts
+
+    # ------------------------------------------------------------------
+    # input specs (ShapeDtypeStruct stand-ins; the dry-run lowers on these)
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> tuple[dict, dict]:
+        """Returns (structs, logical shardings) for the step inputs."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32, bf16 = jnp.int32, jnp.bfloat16
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            shards = {"tokens": (DP, None)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+                shards["labels"] = (DP, None)
+            if cfg.mrope_sections is not None:
+                specs["positions"] = jax.ShapeDtypeStruct((B, 3, S), i32)
+                shards["positions"] = (DP, None, None)
+            if cfg.family == "audio":
+                specs["audio_embeds"] = jax.ShapeDtypeStruct((B, cfg.n_audio_ctx, cfg.d_model), bf16)
+                shards["audio_embeds"] = (DP, None, None)
+            return specs, shards
+        # decode: one new token against a cache of length S
+        specs = {"token": jax.ShapeDtypeStruct((B,), i32)}
+        shards = {"token": (DP,)}
+        if cfg.mrope_sections is not None:
+            specs["positions"] = jax.ShapeDtypeStruct((B, 3, 1), i32)
+            shards["positions"] = (DP, None, None)
+        return specs, shards
+
+    def cache_specs(self, shape: ShapeConfig) -> tuple[dict, dict]:
+        """Abstract cache (ShapeDtypeStruct) + logical shardings for decode."""
+        cache = jax.eval_shape(lambda: self.make_cache(shape.global_batch, shape.seq_len))
+        return cache, cache_shardings(self.cfg, cache)
+
+
+def cache_shardings(cfg: ArchConfig, cache: dict) -> dict:
+    """Logical shardings for cache pytrees.
+
+    KV caches are sequence-sharded on the TP axis (flash-decoding layout,
+    DESIGN.md §5) and batch-sharded on DP; recurrent states shard heads on TP.
+    """
+    out = {}
+    for name, leaf in cache.items():
+        nd = leaf.ndim if hasattr(leaf, "ndim") else 0
+        if name in ("k", "v"):           # (L, B, Smax, KVH, hd)
+            out[name] = (None, DP, TP, None, None)
+        elif name in ("xk", "xv"):       # whisper cross KV (L, B, ctx, H, hd)
+            out[name] = (None, DP, None, TP, None)
+        elif name == "ssm":              # (L, B, nh, hd, ds)
+            out[name] = (None, DP, TP, None, None)
+        elif name == "wkv":              # (L, B, nh, hdk, hdv)
+            out[name] = (None, DP, TP, None, None)
+        elif name == "conv":             # (L, B, W-1, C)
+            out[name] = (None, DP, None, TP)
+        elif name in ("sh_a", "sh_f"):   # (L, B, d)
+            out[name] = (None, DP, None)
+        elif name == "length":
+            out[name] = (DP,)
+        else:
+            out[name] = tuple([None] * nd)
+    return out
+
+
+def build(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        defs = lambda: transformer.model_defs(cfg)
+        make_cache = lambda B, S: transformer.init_cache(cfg, B, S)
+    elif fam == "hybrid":
+        mod = zamba2
+        defs = lambda: zamba2.model_defs(cfg)
+        make_cache = lambda B, S: zamba2.init_cache(cfg, B, S)
+    elif fam == "ssm":
+        mod = rwkv6
+        defs = lambda: rwkv6.model_defs(cfg)
+        make_cache = lambda B, S: rwkv6.init_cache(cfg, B, S)
+    elif fam == "audio":
+        mod = whisper
+        defs = lambda: whisper.model_defs(cfg)
+        make_cache = lambda B, S: whisper.init_cache(cfg, B, S)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return Model(
+        cfg=cfg,
+        defs=defs,
+        train_loss=lambda params, batch: mod.forward_train(params, cfg, batch),
+        prefill=lambda params, batch: mod.forward_prefill(params, cfg, batch),
+        decode=lambda params, cache, token, positions=None:
+            mod.forward_decode(params, cfg, cache, token, positions),
+        make_cache=make_cache,
+    )

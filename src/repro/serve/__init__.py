@@ -1,0 +1,1 @@
+from .engine import Engine, KVCompressionConfig, compress_cache, decompress_cache  # noqa: F401

@@ -1,0 +1,2 @@
+from .step import TrainConfig, build_decode_step, build_prefill_step, build_train_step  # noqa: F401
+from .trainer import StragglerWatchdog, Trainer  # noqa: F401

@@ -1,0 +1,134 @@
+"""Numerics of the sequence mixers vs. brute-force oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models import mamba2, rwkv6
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("S,H,KVH,D", [(128, 4, 2, 32), (256, 8, 8, 16), (96, 4, 1, 32)])
+def test_flash_vs_reference(causal, S, H, KVH, D):
+    B = 2
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((B, S, KVH, D)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((B, S, KVH, D)).astype(np.float32))
+    out = attn.flash_attention(q, k, v, causal=causal, q_chunk=32, kv_chunk=32)
+    ref = attn.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_vs_full():
+    """Single-token decode over a cache == last row of full causal attention."""
+    B, S, H, KVH, D = 2, 64, 4, 2, 32
+    q_all = jnp.asarray(RNG.standard_normal((B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((B, S, KVH, D)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((B, S, KVH, D)).astype(np.float32))
+    full = attn.attention_reference(q_all, k, v, causal=True)
+    out = attn.decode_attention(q_all[:, -1], k, v, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    B, S, H, D = 1, 16, 2, 32
+    x = jnp.asarray(RNG.standard_normal((B, S, H, D)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y = attn.apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+def test_mrope_matches_rope_when_positions_equal():
+    """With t=h=w position ids, M-RoPE degenerates to plain RoPE."""
+    B, S, H, D = 1, 8, 2, 32
+    x = jnp.asarray(RNG.standard_normal((B, S, H, D)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pos3 = jnp.broadcast_to(pos[:, None, :], (B, 3, S))
+    y1 = attn.apply_rope(x, pos, theta=1e4)
+    y2 = attn.apply_mrope(x, pos3, (6, 5, 5), theta=1e4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 chunked SSD vs step-by-step recurrence
+# ---------------------------------------------------------------------------
+
+def _ssd_stepwise(xh, bmat, cmat, dt, A_log, D):
+    B, S, nh, hd = xh.shape
+    ds = bmat.shape[-1]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))
+    h = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    ys = []
+    for t in range(S):
+        a = jnp.exp(-jnp.exp(A_log)[None] * dtf[:, t])        # (B,nh)
+        upd = jnp.einsum("bhe,bd->bhed", xh[:, t].astype(jnp.float32) * dtf[:, t][..., None],
+                         bmat[:, t].astype(jnp.float32))
+        h = a[:, :, None, None] * h + upd
+        y = jnp.einsum("bd,bhed->bhe", cmat[:, t].astype(jnp.float32), h)
+        ys.append(y + xh[:, t].astype(jnp.float32) * D[None, :, None])
+    return jnp.stack(ys, axis=1), h
+
+
+def test_mamba2_chunked_equals_stepwise():
+    B, S, nh, hd, ds = 2, 256, 4, 16, 8
+    xh = jnp.asarray(RNG.standard_normal((B, S, nh, hd)).astype(np.float32))
+    bmat = jnp.asarray(RNG.standard_normal((B, S, ds)).astype(np.float32))
+    cmat = jnp.asarray(RNG.standard_normal((B, S, ds)).astype(np.float32))
+    dt = jnp.asarray(RNG.standard_normal((B, S, nh)).astype(np.float32))
+    A_log = jnp.asarray(RNG.standard_normal((nh,)).astype(np.float32) * 0.5)
+    D = jnp.asarray(RNG.standard_normal((nh,)).astype(np.float32))
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    y_chunk, h_chunk = mamba2._ssd_chunked(xh, bmat, cmat, dt, A_log, D, h0)
+    y_step, h_step = _ssd_stepwise(xh, bmat, cmat, dt, A_log, D)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_step), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked WKV vs brute force
+# ---------------------------------------------------------------------------
+
+def _wkv_stepwise(r, k, v, la, u):
+    B, S, nh, hd = r.shape
+    s = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    os_ = []
+    for t in range(S):
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, t], v[:, t])
+        o = jnp.einsum("bhd,bhde->bhe", r[:, t], s + u[None, :, :, None] * kv)
+        os_.append(o)
+        s = jnp.exp(la[:, t])[..., None] * s + kv
+    return jnp.stack(os_, axis=1), s
+
+
+def test_rwkv6_chunked_equals_stepwise():
+    B, S, nh, hd = 2, 64, 2, 8
+    r = jnp.asarray(RNG.standard_normal((B, S, nh, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((B, S, nh, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((B, S, nh, hd)).astype(np.float32))
+    la = -jnp.exp(jnp.asarray(RNG.standard_normal((B, S, nh, hd)).astype(np.float32)))
+    u = jnp.asarray(RNG.standard_normal((nh, hd)).astype(np.float32))
+    s0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    o_chunk, s_chunk = rwkv6._wkv_chunked(r, k, v, la, u, s0)
+    o_step, s_step = _wkv_stepwise(r, k, v, la, u)
+    np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_step), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(s_step), rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv6_prefill_then_decode_matches_full():
+    """State carried out of prefill continues exactly (chunked == stepwise)."""
+    B, S, nh, hd = 1, 32, 2, 8
+    r = jnp.asarray(RNG.standard_normal((B, S + 1, nh, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((B, S + 1, nh, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((B, S + 1, nh, hd)).astype(np.float32))
+    la = -jnp.exp(jnp.asarray(RNG.standard_normal((B, S + 1, nh, hd)).astype(np.float32)))
+    u = jnp.asarray(RNG.standard_normal((nh, hd)).astype(np.float32))
+    s0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    o_full, _ = rwkv6._wkv_chunked(r, k, v, la, u, s0)
+    o_pre, s_mid = rwkv6._wkv_chunked(r[:, :S], k[:, :S], v[:, :S], la[:, :S], u, s0)
+    o_one, _ = rwkv6._wkv_chunked(r[:, S:], k[:, S:], v[:, S:], la[:, S:], u, s_mid)
+    np.testing.assert_allclose(np.asarray(o_one[:, 0]), np.asarray(o_full[:, S]),
+                               rtol=2e-3, atol=2e-3)

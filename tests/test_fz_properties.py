@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for the FZ pipeline invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encode as enc
+from repro.core import fz, metrics, quant, shuffle
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def arrays(draw, max_elems=20_000):
+    ndim = draw(st.integers(1, 3))
+    dims = draw(st.lists(st.integers(1, 40), min_size=ndim, max_size=ndim))
+    n = int(np.prod(dims))
+    if n > max_elems:
+        dims = [min(d, 16) for d in dims]
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    kind = draw(st.sampled_from(["normal", "smooth", "constant", "zeros"]))
+    if kind == "normal":
+        x = rng.standard_normal(dims)
+    elif kind == "smooth":
+        x = rng.standard_normal(dims)
+        for ax in range(len(dims)):
+            x = np.cumsum(x, axis=ax) * 0.1
+    elif kind == "constant":
+        x = np.full(dims, rng.uniform(-100, 100))
+    else:
+        x = np.zeros(dims)
+    return x.astype(np.float32)
+
+
+@st.composite
+def field_and_eb(draw):
+    x = arrays(draw)
+    eb = draw(st.sampled_from([1e-2, 1e-3, 1e-4, 1e-5]))
+    return x, eb
+
+
+@given(field_and_eb())
+@settings(**SET)
+def test_error_bound_invariant(case):
+    """|x - D(C(x))|_inf <= eb_abs with exact outliers ON (strict mode)."""
+    x, eb = case
+    cfg = fz.FZConfig(eb=eb, eb_mode="rel", exact_outliers=True, outlier_frac=1.0)
+    rec, c = fz.roundtrip(jnp.asarray(x), cfg)
+    eb_abs = float(c.eb_abs)
+    assert float(metrics.max_abs_err(jnp.asarray(x), rec)) <= eb_abs * 1.001 + 1e-30
+
+
+@given(field_and_eb())
+@settings(**SET)
+def test_compression_ratio_accounting(case):
+    """used_bytes is positive, <= capacity bytes, and CR >= header-limited floor."""
+    x, eb = case
+    cfg = fz.FZConfig(eb=eb)
+    c = fz.compress(jnp.asarray(x), cfg)
+    used = int(c.used_bytes())
+    assert used > 0
+    assert int(c.nnz_blocks) <= fz.FZConfig.n_blocks(x.size)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@settings(**SET)
+def test_bitshuffle_involution(seed, n_tiles):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << 16, size=n_tiles * shuffle.TILE, dtype=np.uint16))
+    assert jnp.array_equal(shuffle.bitunshuffle(shuffle.bitshuffle(codes)), codes)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_transpose16_is_involution(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(32, 16), dtype=np.uint16))
+    assert jnp.array_equal(shuffle.transpose16(shuffle.transpose16(x)), x)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.9))
+@settings(**SET)
+def test_encoder_roundtrip_exact(seed, density):
+    """encode/decode is lossless when capacity >= nnz (any sparsity)."""
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 1 << 16, size=4096, dtype=np.uint16)
+    mask = rng.random(4096 // 8) < density
+    words = words.reshape(-1, 8) * mask[:, None]
+    words = jnp.asarray(words.reshape(-1).astype(np.uint16))
+    n_blocks = words.size // enc.BLOCK_WORDS
+    bitflags, payload, nnz = enc.encode(words, capacity=n_blocks)
+    dec = enc.decode(bitflags, payload, n_blocks=n_blocks)
+    assert jnp.array_equal(dec, words)
+    assert int(nnz) == int(jnp.sum(jnp.any(words.reshape(-1, 8) != 0, axis=1)))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_lorenzo_inverse_exact(seed):
+    rng = np.random.default_rng(seed)
+    for shape in [(100,), (17, 23), (5, 7, 11)]:
+        q = jnp.asarray(rng.integers(-1000, 1000, size=shape, dtype=np.int32))
+        assert jnp.array_equal(quant.lorenzo_inverse(quant.lorenzo_delta(q)), q)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["sign_mag", "zigzag"]))
+@settings(**SET)
+def test_code_roundtrip(seed, mode):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.integers(-32767, 32768, size=1000, dtype=np.int32))
+    codes, over, resid = quant.to_codes(d, code_mode=mode)
+    assert not bool(jnp.any(over))
+    assert bool(jnp.all(resid == 0))
+    assert jnp.array_equal(quant.from_codes(codes, code_mode=mode), d)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_monotone_ratio_in_eb(seed):
+    """Looser error bounds never compress worse (same data)."""
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.standard_normal((64, 64)).astype(np.float32), axis=0)
+    crs = []
+    for eb in (1e-4, 1e-3, 1e-2):
+        c = fz.compress(jnp.asarray(x), fz.FZConfig(eb=eb))
+        crs.append(float(c.compression_ratio()))
+    assert crs[0] <= crs[1] * 1.01 and crs[1] <= crs[2] * 1.01, crs
+
+
+def test_paper_mode_matches_strict_when_no_outliers():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((np.cumsum(rng.standard_normal(30_000)) * 0.01).astype(np.float32))
+    strict = fz.FZConfig(eb=1e-3, exact_outliers=True)
+    paper = fz.FZConfig(eb=1e-3, exact_outliers=False)
+    rs, cs = fz.roundtrip(x, strict)
+    rp, cp = fz.roundtrip(x, paper)
+    assert int(cs.n_outliers) == 0
+    assert jnp.array_equal(rs, rp)

@@ -1,0 +1,93 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fz, metrics
+from repro.kernels import bitshuffle_flag as bsf
+from repro.kernels import lorenzo_quant as lq
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n_tiles", [1, 2, 8, 9, 17])
+def test_bitshuffle_flag_matches_oracle(n_tiles):
+    codes = jnp.asarray(RNG.integers(0, 1 << 16, size=(n_tiles, ref.TILE), dtype=np.uint16))
+    sh_k, fl_k = bsf.bitshuffle_flag(codes, interpret=True)
+    sh_r, fl_r = ref.bitshuffle_flag_ref(codes)
+    np.testing.assert_array_equal(np.asarray(sh_k), np.asarray(sh_r))
+    np.testing.assert_array_equal(np.asarray(fl_k), np.asarray(fl_r))
+
+
+@pytest.mark.parametrize("n_tiles", [1, 3, 8])
+def test_unshuffle_kernel_roundtrip(n_tiles):
+    codes = jnp.asarray(RNG.integers(0, 1 << 16, size=(n_tiles, ref.TILE), dtype=np.uint16))
+    sh, _ = bsf.bitshuffle_flag(codes, interpret=True)
+    back = bsf.bitunshuffle_tiles(sh, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_unshuffle_matches_reference_oracle():
+    codes = jnp.asarray(RNG.integers(0, 1 << 16, size=(4, ref.TILE), dtype=np.uint16))
+    sh_r, _ = ref.bitshuffle_flag_ref(codes)
+    back = bsf.bitunshuffle_tiles(sh_r, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(ref.bitunshuffle_ref(sh_r)))
+
+
+@pytest.mark.parametrize("shape", [(7,), (4096,), (10_001,), (64, 64), (33, 1000),
+                                   (16, 32, 48), (65, 7, 129), (1, 1, 1)])
+@pytest.mark.parametrize("code_mode", ["sign_mag", "zigzag"])
+def test_lorenzo_quant_matches_oracle(shape, code_mode):
+    x = jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+    k = lq.lorenzo_quant(x, jnp.float32(1e-3), code_mode=code_mode, interpret=True)
+    r = ref.lorenzo_quant_ref(x, jnp.float32(1e-3), code_mode=code_mode)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-4, 3.7e-3])
+def test_lorenzo_quant_eb_sweep(eb):
+    x = jnp.asarray(np.cumsum(RNG.standard_normal((50, 70)), axis=0).astype(np.float32))
+    k = lq.lorenzo_quant(x, jnp.float32(eb), interpret=True)
+    r = ref.lorenzo_quant_ref(x, jnp.float32(eb))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_saturation_on_rough_data():
+    """Kernel saturates exactly like the reference on outlier-heavy data."""
+    x = jnp.asarray(RNG.standard_normal((100, 100)).astype(np.float32) * 1e4)
+    k = lq.lorenzo_quant(x, jnp.float32(1e-4), interpret=True)
+    r = ref.lorenzo_quant_ref(x, jnp.float32(1e-4))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_fz_kernel_path_bit_identical_to_reference():
+    x = jnp.asarray(np.cumsum(RNG.standard_normal((128, 128)), axis=1).astype(np.float32))
+    cfg_k = fz.FZConfig(eb=1e-3, use_kernels=True, exact_outliers=False)
+    cfg_r = fz.FZConfig(eb=1e-3, use_kernels=False, exact_outliers=False)
+    rk, ck = fz.roundtrip(x, cfg_k)
+    rr, cr = fz.roundtrip(x, cfg_r)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(ck.bitflags), np.asarray(cr.bitflags))
+    np.testing.assert_array_equal(np.asarray(ck.payload), np.asarray(cr.payload))
+    assert int(ck.nnz_blocks) == int(cr.nnz_blocks)
+
+
+def test_fz_kernel_hybrid_strict_mode():
+    """use_kernels + exact_outliers: quantize falls back to ref, bound holds."""
+    x = jnp.asarray(RNG.standard_normal((64, 200)).astype(np.float32) * 50)
+    cfg = fz.FZConfig(eb=1e-4, use_kernels=True, exact_outliers=True, outlier_frac=1.0)
+    rec, c = fz.roundtrip(x, cfg)
+    assert float(metrics.max_abs_err(x, rec)) <= float(c.eb_abs) * (1 + 1e-5)
+
+
+def test_ops_shuffle_encode_equals_core_encode():
+    from repro.core import encode as enc, shuffle as shf
+    codes = jnp.asarray(RNG.integers(0, 1 << 16, size=3 * ref.TILE, dtype=np.uint16))
+    cap = codes.size // enc.BLOCK_WORDS
+    bf_k, pl_k, nnz_k = ops.bitshuffle_flag_encode(codes, capacity=cap)
+    bf_r, pl_r, nnz_r = enc.encode(shf.bitshuffle(codes), capacity=cap)
+    np.testing.assert_array_equal(np.asarray(bf_k), np.asarray(bf_r))
+    np.testing.assert_array_equal(np.asarray(pl_k), np.asarray(pl_r))
+    assert int(nnz_k) == int(nnz_r)

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: reduced configs, 1 fwd/train step on CPU,
+shape + finiteness asserts (brief deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import zoo
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32))}
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, 3, S))
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_audio_ctx, cfg.d_model)).astype(np.float32)
+        ).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = configs.get(arch, smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = _batch(cfg, rng)
+    loss, aux = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = configs.get(arch, smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    batch = _batch(cfg, rng)
+    batch.pop("labels")
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = (jnp.full((B, 3, 1), S, jnp.int32) if cfg.mrope_sections is not None else None)
+    logits2, cache2 = jax.jit(lambda p, c, t: model.decode(p, c, t, pos))(params, cache, tok)
+    assert logits2.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    if "length" in cache2:
+        assert int(cache2["length"][0]) == S + 1
+
+
+def test_exact_configs_match_brief():
+    """Pin the published dims (vs. the assignment table)."""
+    expect = {
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }
+    for arch, (L, d, H, KV, ff, V) in expect.items():
+        c = configs.get(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+            (L, d, H, KV, ff, V), arch
+
+
+def test_moe_configs():
+    dbrx = configs.get("dbrx-132b")
+    assert (dbrx.n_experts, dbrx.top_k) == (16, 4)
+    scout = configs.get("llama4-scout-17b-a16e")
+    assert (scout.n_experts, scout.top_k, scout.shared_expert) == (16, 1, True)
+
+
+def test_long_context_skip_list():
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    from repro.configs.base import cells_for
+    runs_long = {a for a in configs.ARCH_IDS
+                 if "long_500k" in cells_for(configs.get(a))}
+    assert runs_long == {"zamba2-2.7b", "rwkv6-3b"}
+
+
+def test_param_counts_in_published_ballpark():
+    """Total parameters within ~20% of the names' advertised sizes."""
+    expect_b = {"yi-6b": 6.1, "mistral-large-123b": 123, "glm4-9b": 9.4,
+                "internlm2-20b": 19.9, "qwen2-vl-72b": 72,
+                "dbrx-132b": 132, "rwkv6-3b": 3.1, "zamba2-2.7b": 2.7}
+    for arch, target in expect_b.items():
+        n = zoo.build(configs.get(arch)).param_count() / 1e9
+        assert abs(n - target) / target < 0.35, f"{arch}: {n:.1f}B vs {target}B"
