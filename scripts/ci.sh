@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entry point: `scripts/ci.sh fast|slow|all` (default fast).
+#
+# XLA flags are pinned so the fake-device tests are deterministic: the main
+# pytest process keeps a single CPU device (tests/test_dist.py spawns its own
+# 8-fake-device subprocess and overrides XLA_FLAGS there).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=1}"
+
+tier="${1:-fast}"
+case "$tier" in
+  fast) exec python -m pytest -q -m "not slow" ;;
+  slow) exec python -m pytest -q -m slow ;;
+  all)  exec python -m pytest -q ;;
+  *)    echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;
+esac

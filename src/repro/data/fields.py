@@ -52,7 +52,8 @@ def make_field(kind: str, shape=(128, 128, 128), seed: int = 0) -> np.ndarray:
             sl[ax] = slice(None)
             k2 = k2 + (k[tuple(sl)] ** 2).astype(np.float32)
         amp = (1.0 + k2) ** (-11.0 / 12.0)  # ~Kolmogorov-ish slope
-        return np.fft.irfftn(spec * amp, s=shape).astype(np.float32)
+        return np.fft.irfftn(spec * amp, s=shape,
+                             axes=list(range(len(shape)))).astype(np.float32)
     if kind == "particle":
         x = rng.lognormal(mean=0.0, sigma=2.0, size=shape).astype(np.float32)
         return np.log1p(x)  # the paper compresses log-transformed HACC

@@ -1,0 +1,23 @@
+"""repro.dist — the distribution layer: FZ containers as a wire format.
+
+The paper's §2.4 pitch is that error-bounded compression pays off wherever
+scientific data is movement-bound, not compute-bound. This package deploys
+that idea inside the training/serving stack, one module per use case:
+
+  * ``sharding`` — logical-axis resolution. Models declare logical axes
+    ("fsdp"/"tp"/"dp"/None); this module resolves them against any concrete
+    mesh (laptop, (data, model) single-pod, (pod, data, model) multi-pod)
+    with divisibility-fallback-to-replication, so the same model definition
+    is elastic across topologies (ckpt/elastic.py builds on this).
+  * ``compressed_allreduce`` — §2.4 "wire compression": the cross-pod
+    gradient mean crosses the slow inter-pod link as capacity-sized FZ
+    containers instead of raw f32, with error feedback carrying the lossy
+    residual into the next step (train/step.py pod-compress path).
+  * ``flash_decode`` — sequence-sharded decode attention for serving: each
+    KV shard produces flash-decoding partials that are renormalized across
+    the sharding axis, so a parked-and-resharded cache (§2.4 "in-memory
+    compression", serve/engine.py) never has to be regathered on one device.
+  * ``compat`` — version-portability shims for the mesh / shard_map APIs so
+    the same code runs on the pinned jax as well as current releases.
+"""
+from . import compat, compressed_allreduce, flash_decode, sharding  # noqa: F401

@@ -1,0 +1,52 @@
+"""Version-portability shims for mesh and shard_map construction.
+
+The library targets the modern surface (``jax.shard_map`` with
+``axis_names``, ``jax.make_mesh`` with ``axis_types``), but the container
+pins jax 0.4.x where shard_map lives in ``jax.experimental.shard_map`` and
+meshes take no axis types. Every mesh / shard_map construction in the
+library and tests goes through these two helpers so the difference is
+confined to this module.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with all axes auto-partitioned.
+
+    Auto is the modern default, so no ``axis_types`` argument is needed on
+    either side of the version split; this wrapper exists so call sites
+    never spell the kwarg that 0.4.x rejects.
+    """
+    if devices is not None:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs, axis_names=None):
+    """Manual-collectives map, portable across the shard_map API split.
+
+    ``axis_names`` is the set of mesh axes the body addresses manually (the
+    modern kwarg); ``None`` means every mesh axis is manual. On APIs without
+    ``axis_names`` the body runs fully manual over every mesh axis with
+    replication checking off — equivalent as long as the in/out specs simply
+    do not use the non-addressed axes, which all callers here follow.
+    Kwarg support is detected from the signature, never by retrying on
+    ``TypeError`` (which would swallow unrelated errors from the body).
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+    params = inspect.signature(impl).parameters
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if axis_names is not None and "axis_names" in params:
+        kwargs["axis_names"] = set(axis_names)
+    if "check_vma" in params:
+        kwargs["check_vma"] = False
+    elif "check_rep" in params:
+        kwargs["check_rep"] = False
+    return impl(f, **kwargs)

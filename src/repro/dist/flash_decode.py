@@ -1,0 +1,57 @@
+"""Sequence-sharded decode attention (flash-decoding partials + combine).
+
+Decode attention over a long KV cache is a pure gather/reduce — exactly the
+movement-bound serving path where the cache is worth keeping sharded (and,
+parked, FZ-compressed: serve/engine.py). Each shard of the sequence axis
+computes the standard flash-decoding partials over its local KV slice —
+running max, exp-sum denominator, and weighted-value numerator — then the
+partials are renormalized to the global max and combined with psum over the
+sharding axis. Matches models/attention.decode_attention to float32
+round-off (pinned at 2e-4 in tests/test_dist.py).
+
+This is the jnp reference; the Pallas block-parallel kernel is a ROADMAP
+open item and must keep this function as its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Same finite -inf stand-in as models/attention.py (kept local: the dist
+# layer must not import the model zoo). Finite so that an entirely-masked
+# shard yields 0/0-free partials: NEG_INF - NEG_INF == 0.
+NEG_INF = -1e30
+
+
+def flash_decode_shard(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                       length: jax.Array, *, axis: str,
+                       shard_offset: jax.Array | int) -> jax.Array:
+    """One shard of sequence-sharded decode attention; call inside shard_map.
+
+    q: (B, H, D) replicated; k_cache/v_cache: (B, S_shard, KVH, D) — the
+    local slice of the sequence axis; length: (B,) global valid prefix;
+    ``shard_offset``: global position of this shard's first cache slot
+    (e.g. ``lax.axis_index(axis) * S_shard``). Returns (B, H, D) replicated
+    over ``axis``.
+    """
+    B, H, D = q.shape
+    S_shard, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = shard_offset + jnp.arange(S_shard)
+    valid = pos[None, :] < length[:, None]                       # (B, S_shard)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m_local = jnp.max(s, axis=-1)                                # (B, KVH, G)
+    p = jnp.exp(s - m_local[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)               # empty-shard safety
+    num = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    den = jnp.sum(p, axis=-1)
+
+    m_global = jax.lax.pmax(m_local, axis)
+    corr = jnp.exp(m_local - m_global)                           # 0 for empty shards
+    num = jax.lax.psum(num * corr[..., None], axis)
+    den = jax.lax.psum(den * corr, axis)
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out.reshape(B, H, D).astype(q.dtype)

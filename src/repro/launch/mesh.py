@@ -14,10 +14,12 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import compat
+
 
 def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # all axes auto-partitioned; compat owns the jax-version split
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

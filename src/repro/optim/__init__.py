@@ -1,2 +1,2 @@
-from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa: F401
 from .schedules import warmup_cosine  # noqa: F401

@@ -24,7 +24,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.dist import compressed_allreduce as car
 from repro.dist import sharding as shd
 from repro.models import zoo
-from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.optim import AdamWConfig, adamw_init, adamw_update, global_norm, warmup_cosine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,15 +109,13 @@ def build_train_step(model: zoo.Model, shape: ShapeConfig, mesh, tcfg: TrainConf
         lr = warmup_cosine(step_idx, peak_lr=tcfg.peak_lr,
                            warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
         new_params, new_opt = adamw_update(grads, opt_state, lr, tcfg.adamw, params)
-        metrics = {"loss": loss, "lr": lr, "grad_norm":
-                   jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                                for g in jax.tree.leaves(grads)))}
+        metrics = {"loss": loss, "lr": lr, "grad_norm": global_norm(grads)}
         return new_params, new_opt, metrics
 
     if use_pod_compress:
-        # per-pod gradients via vmap over a leading pod dim (pure-auto SPMD;
-        # see dist/compressed_allreduce.py for why not hybrid shard_map), then
-        # the compressed cross-pod reduce with error feedback.
+        # per-pod gradients via vmap over a leading pod dim (loss/backward
+        # stay pure-auto SPMD); the reduce hop itself is a manual shard_map
+        # over 'pod' with error feedback — see dist/compressed_allreduce.py.
         def step(params, opt_state, err_state, step_idx, batch):
             def split(x):
                 b = x.shape[0]
@@ -147,6 +145,8 @@ def build_train_step(model: zoo.Model, shape: ShapeConfig, mesh, tcfg: TrainConf
         err_sh_fn = None
 
     def make_err_state(grads_abstract):
+        if not use_pod_compress:   # no pod axis -> step never reads err
+            return {}
         return car.init_error_state(grads_abstract, n_pods, tcfg.grad_compress)
 
     jitted = jax.jit(

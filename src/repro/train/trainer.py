@@ -81,7 +81,7 @@ class Trainer:
         self.opt = jax.device_put(opt, self.info["opt"])
         grads_abs = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), self.params)
-        self.err = self.info["make_err_state"](grads_abs)
+        self.err = self._place_err(self.info["make_err_state"](grads_abs))
         self.step = 0
         self.history: list[dict] = []
         if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
@@ -91,15 +91,20 @@ class Trainer:
     def _state(self):
         return {"params": self.params, "opt": self.opt, "err": self.err}
 
+    def _place_err(self, err):
+        """Stacked residuals live pod-sharded, not replicated."""
+        if self.info["err_shardings"] is None:
+            return err
+        grads_abs = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), self.params)
+        return jax.device_put(err, self.info["err_shardings"](grads_abs))
+
     def _restore(self):
         template = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), self._state())
-        shardings = {"params": self.info["params"], "opt": self.info["opt"],
-                     "err": jax.tree.map(lambda _: None, template["err"])}
-        state, meta = ckpt.restore(self.ckpt_dir, template,
-                                   shardings=None)
+        state, meta = ckpt.restore(self.ckpt_dir, template)
         self.params = jax.device_put(state["params"], self.info["params"])
         self.opt = jax.device_put(state["opt"], self.info["opt"])
-        self.err = jax.tree.map(jnp.asarray, state["err"])
+        self.err = self._place_err(jax.tree.map(jnp.asarray, state["err"]))
         self.step = int(meta["step"])
 
     def save(self):

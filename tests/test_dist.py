@@ -65,8 +65,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 # ---- 1) flash-decoding: sequence-sharded decode == unsharded reference
 from repro.models.attention import decode_attention
+from repro.dist import compat
 from repro.dist.flash_decode import flash_decode_shard
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 B, S, H, KVH, D = 4, 64, 8, 4, 16
 rng = np.random.default_rng(0)
 q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
@@ -81,9 +82,9 @@ def body(q, k_sh, v_sh, length):
     return flash_decode_shard(q, k_sh, v_sh, length, axis="model",
                               shard_offset=idx * S_shard)
 
-sm = jax.shard_map(body, mesh=mesh,
-                   in_specs=(P(), P(None, "model"), P(None, "model"), P()),
-                   out_specs=P(), axis_names={"model"}, check_vma=False)
+sm = compat.shard_map(body, mesh=mesh,
+                      in_specs=(P(), P(None, "model"), P(None, "model"), P()),
+                      out_specs=P(), axis_names={"model"})
 out = jax.jit(sm)(q, k, v, length)
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
 print("flash_decode OK")
@@ -91,8 +92,7 @@ print("flash_decode OK")
 # ---- 2) compressed cross-pod reduce ~= exact mean within error bound
 from repro.dist.compressed_allreduce import (GradCompressionConfig, init_error_state,
                                              reduce_stacked)
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh3 = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 gc = GradCompressionConfig(enabled=True, eb=1e-4, min_leaf_size=1024)
 g_stack = {"w": jnp.asarray(rng.standard_normal((2, 64, 64)).astype(np.float32)),
            "b": jnp.asarray(rng.standard_normal((2, 8)).astype(np.float32))}
@@ -117,7 +117,7 @@ from repro.ckpt.elastic import reshard
 tree = {"w": jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))}
 logical = {"w": ("fsdp", "tp")}
 from jax.sharding import Mesh
-m_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+m_a = compat.make_mesh((4, 2), ("data", "model"))
 m_b = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
 t_a = reshard(tree, logical, m_a)
 t_b = reshard(t_a, logical, m_b)

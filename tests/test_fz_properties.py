@@ -1,25 +1,32 @@
-"""Property-based tests (hypothesis) for the FZ pipeline invariants."""
+"""Property-based tests for the FZ pipeline invariants.
+
+Two tiers share one set of checkers:
+  * hypothesis-driven search when the wheel is available;
+  * a seeded ``np.random`` parametrized fallback that always runs, so the
+    round-trip / error-bound properties are exercised even in hermetic
+    (no-network) environments where ``hypothesis`` cannot be installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import encode as enc
 from repro.core import fz, metrics, quant, shuffle
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hermetic box: the seeded fallback tier below still runs
+    HAVE_HYPOTHESIS = False
+
 SET = dict(max_examples=25, deadline=None)
+KINDS = ("normal", "smooth", "constant", "zeros")
+EBS = (1e-2, 1e-3, 1e-4, 1e-5)
 
 
-def arrays(draw, max_elems=20_000):
-    ndim = draw(st.integers(1, 3))
-    dims = draw(st.lists(st.integers(1, 40), min_size=ndim, max_size=ndim))
-    n = int(np.prod(dims))
-    if n > max_elems:
-        dims = [min(d, 16) for d in dims]
-    seed = draw(st.integers(0, 2**31 - 1))
+def make_array(seed: int, kind: str, dims) -> np.ndarray:
     rng = np.random.default_rng(seed)
-    kind = draw(st.sampled_from(["normal", "smooth", "constant", "zeros"]))
     if kind == "normal":
         x = rng.standard_normal(dims)
     elif kind == "smooth":
@@ -33,29 +40,20 @@ def arrays(draw, max_elems=20_000):
     return x.astype(np.float32)
 
 
-@st.composite
-def field_and_eb(draw):
-    x = arrays(draw)
-    eb = draw(st.sampled_from([1e-2, 1e-3, 1e-4, 1e-5]))
-    return x, eb
+# ---------------------------------------------------------------------------
+# Checkers (shared by both tiers)
+# ---------------------------------------------------------------------------
 
-
-@given(field_and_eb())
-@settings(**SET)
-def test_error_bound_invariant(case):
+def check_error_bound_invariant(x: np.ndarray, eb: float) -> None:
     """|x - D(C(x))|_inf <= eb_abs with exact outliers ON (strict mode)."""
-    x, eb = case
     cfg = fz.FZConfig(eb=eb, eb_mode="rel", exact_outliers=True, outlier_frac=1.0)
     rec, c = fz.roundtrip(jnp.asarray(x), cfg)
     eb_abs = float(c.eb_abs)
     assert float(metrics.max_abs_err(jnp.asarray(x), rec)) <= eb_abs * 1.001 + 1e-30
 
 
-@given(field_and_eb())
-@settings(**SET)
-def test_compression_ratio_accounting(case):
-    """used_bytes is positive, <= capacity bytes, and CR >= header-limited floor."""
-    x, eb = case
+def check_compression_ratio_accounting(x: np.ndarray, eb: float) -> None:
+    """used_bytes is positive and nnz never exceeds the block count."""
     cfg = fz.FZConfig(eb=eb)
     c = fz.compress(jnp.asarray(x), cfg)
     used = int(c.used_bytes())
@@ -63,25 +61,20 @@ def test_compression_ratio_accounting(case):
     assert int(c.nnz_blocks) <= fz.FZConfig.n_blocks(x.size)
 
 
-@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
-@settings(**SET)
-def test_bitshuffle_involution(seed, n_tiles):
+def check_bitshuffle_involution(seed: int, n_tiles: int) -> None:
     rng = np.random.default_rng(seed)
-    codes = jnp.asarray(rng.integers(0, 1 << 16, size=n_tiles * shuffle.TILE, dtype=np.uint16))
+    codes = jnp.asarray(rng.integers(0, 1 << 16, size=n_tiles * shuffle.TILE,
+                                     dtype=np.uint16))
     assert jnp.array_equal(shuffle.bitunshuffle(shuffle.bitshuffle(codes)), codes)
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(**SET)
-def test_transpose16_is_involution(seed):
+def check_transpose16_involution(seed: int) -> None:
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.integers(0, 1 << 16, size=(32, 16), dtype=np.uint16))
     assert jnp.array_equal(shuffle.transpose16(shuffle.transpose16(x)), x)
 
 
-@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.9))
-@settings(**SET)
-def test_encoder_roundtrip_exact(seed, density):
+def check_encoder_roundtrip_exact(seed: int, density: float) -> None:
     """encode/decode is lossless when capacity >= nnz (any sparsity)."""
     rng = np.random.default_rng(seed)
     words = rng.integers(0, 1 << 16, size=4096, dtype=np.uint16)
@@ -95,18 +88,14 @@ def test_encoder_roundtrip_exact(seed, density):
     assert int(nnz) == int(jnp.sum(jnp.any(words.reshape(-1, 8) != 0, axis=1)))
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(**SET)
-def test_lorenzo_inverse_exact(seed):
+def check_lorenzo_inverse_exact(seed: int) -> None:
     rng = np.random.default_rng(seed)
     for shape in [(100,), (17, 23), (5, 7, 11)]:
         q = jnp.asarray(rng.integers(-1000, 1000, size=shape, dtype=np.int32))
         assert jnp.array_equal(quant.lorenzo_inverse(quant.lorenzo_delta(q)), q)
 
 
-@given(st.integers(0, 2**31 - 1), st.sampled_from(["sign_mag", "zigzag"]))
-@settings(**SET)
-def test_code_roundtrip(seed, mode):
+def check_code_roundtrip(seed: int, mode: str) -> None:
     rng = np.random.default_rng(seed)
     d = jnp.asarray(rng.integers(-32767, 32768, size=1000, dtype=np.int32))
     codes, over, resid = quant.to_codes(d, code_mode=mode)
@@ -115,9 +104,7 @@ def test_code_roundtrip(seed, mode):
     assert jnp.array_equal(quant.from_codes(codes, code_mode=mode), d)
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(**SET)
-def test_monotone_ratio_in_eb(seed):
+def check_monotone_ratio_in_eb(seed: int) -> None:
     """Looser error bounds never compress worse (same data)."""
     rng = np.random.default_rng(seed)
     x = np.cumsum(rng.standard_normal((64, 64)).astype(np.float32), axis=0)
@@ -126,6 +113,129 @@ def test_monotone_ratio_in_eb(seed):
         c = fz.compress(jnp.asarray(x), fz.FZConfig(eb=eb))
         crs.append(float(c.compression_ratio()))
     assert crs[0] <= crs[1] * 1.01 and crs[1] <= crs[2] * 1.01, crs
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: hypothesis-driven search (skipped wholesale when unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    def arrays(draw, max_elems=20_000):
+        ndim = draw(st.integers(1, 3))
+        dims = draw(st.lists(st.integers(1, 40), min_size=ndim, max_size=ndim))
+        n = int(np.prod(dims))
+        if n > max_elems:
+            dims = [min(d, 16) for d in dims]
+        seed = draw(st.integers(0, 2**31 - 1))
+        kind = draw(st.sampled_from(list(KINDS)))
+        return make_array(seed, kind, dims)
+
+    @st.composite
+    def field_and_eb(draw):
+        return arrays(draw), draw(st.sampled_from(list(EBS)))
+
+    @given(field_and_eb())
+    @settings(**SET)
+    def test_error_bound_invariant(case):
+        check_error_bound_invariant(*case)
+
+    @given(field_and_eb())
+    @settings(**SET)
+    def test_compression_ratio_accounting(case):
+        check_compression_ratio_accounting(*case)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+    @settings(**SET)
+    def test_bitshuffle_involution(seed, n_tiles):
+        check_bitshuffle_involution(seed, n_tiles)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SET)
+    def test_transpose16_is_involution(seed):
+        check_transpose16_involution(seed)
+
+    @given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.9))
+    @settings(**SET)
+    def test_encoder_roundtrip_exact(seed, density):
+        check_encoder_roundtrip_exact(seed, density)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SET)
+    def test_lorenzo_inverse_exact(seed):
+        check_lorenzo_inverse_exact(seed)
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(["sign_mag", "zigzag"]))
+    @settings(**SET)
+    def test_code_roundtrip(seed, mode):
+        check_code_roundtrip(seed, mode)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SET)
+    def test_monotone_ratio_in_eb(seed):
+        check_monotone_ratio_in_eb(seed)
+
+
+def test_importorskip_guard():
+    """Document the dependency: everything above this line must not require
+    hypothesis at collection time; this canary is the only test that does."""
+    pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: seeded np.random fallback (always runs; fixed case matrix)
+# ---------------------------------------------------------------------------
+
+_FALLBACK_CASES = [
+    (seed, kind, dims, eb)
+    for seed, (kind, dims, eb) in enumerate([
+        ("normal", (40,), 1e-3), ("normal", (17, 23), 1e-4),
+        ("smooth", (20_000,), 1e-4), ("smooth", (64, 64), 1e-5),
+        ("smooth", (16, 16, 16), 1e-3), ("constant", (7, 11), 1e-2),
+        ("zeros", (33,), 1e-3), ("normal", (5, 7, 11), 1e-2),
+    ])
+]
+
+
+@pytest.mark.parametrize("seed,kind,dims,eb", _FALLBACK_CASES)
+def test_error_bound_invariant_seeded(seed, kind, dims, eb):
+    check_error_bound_invariant(make_array(seed, kind, list(dims)), eb)
+
+
+@pytest.mark.parametrize("seed,kind,dims,eb", _FALLBACK_CASES)
+def test_compression_ratio_accounting_seeded(seed, kind, dims, eb):
+    check_compression_ratio_accounting(make_array(seed, kind, list(dims)), eb)
+
+
+@pytest.mark.parametrize("seed,n_tiles", [(0, 1), (1, 3), (2, 6)])
+def test_bitshuffle_involution_seeded(seed, n_tiles):
+    check_bitshuffle_involution(seed, n_tiles)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_transpose16_is_involution_seeded(seed):
+    check_transpose16_involution(seed)
+
+
+@pytest.mark.parametrize("seed,density", [(0, 0.0), (1, 0.3), (2, 0.9)])
+def test_encoder_roundtrip_exact_seeded(seed, density):
+    check_encoder_roundtrip_exact(seed, density)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_lorenzo_inverse_exact_seeded(seed):
+    check_lorenzo_inverse_exact(seed)
+
+
+@pytest.mark.parametrize("seed", range(2))
+@pytest.mark.parametrize("mode", ["sign_mag", "zigzag"])
+def test_code_roundtrip_seeded(seed, mode):
+    check_code_roundtrip(seed, mode)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_monotone_ratio_in_eb_seeded(seed):
+    check_monotone_ratio_in_eb(seed)
 
 
 def test_paper_mode_matches_strict_when_no_outliers():
