@@ -1,0 +1,95 @@
+"""KV-cache compression benchmark (paper §2.4 in-memory use case, served).
+
+Cited from serve/engine.py. Three measurements:
+
+  * memory ratio of a parked cache across the paper's relative error bounds
+    (whole-cache path, ``used_bytes`` accounting);
+  * park/resume latency — the cost FZ must beat for compress-park preemption
+    to outrun drop-and-recompute;
+  * decode-logit deviation: max |logit delta| of one decode step running on a
+    reconstructed cache vs the raw cache;
+
+plus one paged-pool row: a continuous-batching trace over a slab smaller than
+its raw demand, reporting the memory high-water mark vs demand and the
+preempt/resume traffic (serve/kvpool).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PAPER_EBS, timeit
+from repro import configs
+from repro.models import zoo
+from repro.serve import Engine, KVCompressionConfig, PoolConfig, Request
+from repro.serve.engine import (cache_bytes, compress_cache,
+                                compressed_cache_bytes, decompress_cache)
+
+
+def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2):
+    cfg = configs.get(arch, smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32))}
+    eng = Engine(model, params)
+    logits_raw, cache = eng.generate(batch, n_tokens)
+    raw = cache_bytes(cache)
+    tok = jnp.zeros((B,), jnp.int32)
+    base_logits, _ = eng.decode_step(cache, tok)
+
+    rows = []
+    for eb in PAPER_EBS:
+        kcfg = KVCompressionConfig(enabled=True, eb=eb, min_leaf_size=1024)
+        parked = compress_cache(cache, kcfg)
+        packed = compressed_cache_bytes(parked)
+
+        def park():
+            c = compress_cache(cache, kcfg)
+            return [l for l in jax.tree.leaves(c) if hasattr(l, "block_until_ready")]
+
+        def resume():
+            return jax.tree.leaves(decompress_cache(parked, kcfg))
+
+        t_park = timeit(park, warmup=1, iters=3)
+        t_resume = timeit(resume, warmup=1, iters=3)
+        rec = decompress_cache(parked, kcfg)
+        logits_rec, _ = eng.decode_step(rec, tok)
+        dev = float(jnp.max(jnp.abs(logits_rec - base_logits)))
+        rows.append((f"kv-park[eb={eb:g}]", raw / packed,
+                     t_park * 1e3, t_resume * 1e3, dev))
+    return rows
+
+
+def pool_trace(arch="glm4-9b"):
+    cfg = configs.get(arch, smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(req_id=i,
+                    tokens=rng.integers(0, cfg.vocab, (s,), dtype=np.int32),
+                    n_new=8, priority=i % 2)
+            for i, s in enumerate((16, 8, 16, 8))]
+    eng = Engine(model, params,
+                 pool=PoolConfig(num_pages=4, page_size=8, seq_capacity=48,
+                                 cold_after=2, eb=1e-4))
+    outputs, stats, pool = eng.serve(reqs, max_batch=2)
+    assert len(outputs) == len(reqs)
+    return [("kvpool-trace", stats.high_water_used_bytes,
+             stats.high_water_demand_bytes,
+             f"{stats.preemptions}preempt/{stats.resumes}resume/"
+             f"{stats.tiered_pages}tiered")]
+
+
+def main():
+    print("bench,ratio,park_ms,resume_ms,decode_logit_dev")
+    for name, ratio, park_ms, resume_ms, dev in parking_sweep():
+        print(f"{name},{ratio:.2f}x,{park_ms:.1f},{resume_ms:.1f},{dev:.2e}")
+    print("bench,high_water_bytes,raw_demand_bytes,traffic")
+    for name, hw, demand, traffic in pool_trace():
+        print(f"{name},{hw},{demand},{traffic}")
+
+
+if __name__ == "__main__":
+    main()

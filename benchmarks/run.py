@@ -9,6 +9,7 @@ Sections map to the paper:
     breakdown        -> Fig. 10  (per-kernel optimization effects)
     overall          -> Fig. 11  (overall data-transfer throughput model)
     integrations     -> §2.4 use cases in the framework (grads/KV/ckpt)
+    kvcache          -> §2.4 in-memory: KV parking sweep + paged-pool trace
     roofline         -> §Roofline table from the dry-run JSONs
 """
 from __future__ import annotations
@@ -18,7 +19,7 @@ import sys
 import time
 
 SECTIONS = ("rate_distortion", "throughput", "breakdown", "overall",
-            "integrations", "roofline")
+            "integrations", "kvcache", "roofline")
 
 
 def main() -> None:

@@ -1,11 +1,16 @@
-"""Serving with FZ-compressed KV-cache parking (paper §2.4 in-memory use case).
+"""Continuous-batching serving through the paged FZ KV pool (paper §2.4).
 
-Batched prefill -> greedy decode; between steps the KV cache is parked
-(compressed in device memory) and resumed, modeling preemption/swap in a
-production serving stack.
+A synthetic trace with more concurrent sequences than the raw slab can hold:
+the pool completes it anyway because cold pages tier down to FZ-compressed
+containers (freeing their physical slots) and preempted sequences are
+compress-parked instead of recomputed. Every request's tokens are checked
+against the never-parked whole-cache oracle (``Engine.generate``).
 
-    PYTHONPATH=src python examples/serve_compressed_kv.py
+    PYTHONPATH=src python examples/serve_compressed_kv.py            # full
+    PYTHONPATH=src python examples/serve_compressed_kv.py --smoke    # CI: tiny
+                                     # model, 2-page pool, 8-step trace
 """
+import argparse
 import dataclasses
 
 import jax
@@ -14,39 +19,78 @@ import numpy as np
 
 from repro import configs
 from repro.models import zoo
-from repro.serve import Engine, KVCompressionConfig
-from repro.serve.engine import cache_bytes, compressed_cache_bytes
+from repro.serve import Engine, PoolConfig, Request
+
+
+def build(smoke: bool):
+    if smoke:
+        cfg = configs.get("glm4-9b", smoke=True)
+        pool = PoolConfig(num_pages=2, page_size=8, seq_capacity=32,
+                          cold_after=1, eb=1e-4)
+        trace = dict(n_reqs=2, prompt_lens=(8, 8), n_new=8, max_batch=2)
+    else:
+        cfg = dataclasses.replace(
+            configs.get("glm4-9b"),
+            arch_id="glm4-mini", n_layers=4, d_model=256, n_heads=8,
+            n_kv_heads=2, d_ff=704, vocab=4096, head_dim=32)
+        # page-aligned prompts make several lanes open a fresh page on the
+        # same step, overflowing the 5-slot slab -> compress-park preemption
+        pool = PoolConfig(num_pages=5, page_size=16, seq_capacity=128,
+                          cold_after=2, eb=1e-4)
+        trace = dict(n_reqs=6, prompt_lens=(48, 32, 48, 32, 32, 16),
+                     n_new=12, max_batch=3)
+    return cfg, pool, trace
 
 
 def main():
-    cfg = dataclasses.replace(
-        configs.get("glm4-9b"),
-        arch_id="glm4-mini", n_layers=6, d_model=512, n_heads=8, n_kv_heads=2,
-        d_ff=1408, vocab=8192, head_dim=64)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model, 2-page pool, 8-step trace (CI)")
+    args = ap.parse_args()
+
+    cfg, pool_cfg, trace = build(args.smoke)
     model = zoo.build(cfg)
     params = model.init(jax.random.key(0))
-    print(f"serving {cfg.arch_id}: {model.param_count() / 1e6:.1f}M params")
+    print(f"serving {cfg.arch_id}: {model.param_count() / 1e6:.1f}M params, "
+          f"pool {pool_cfg.num_pages} pages x {pool_cfg.page_size} tokens")
 
     rng = np.random.default_rng(0)
-    B, S, new_tokens = 4, 512, 16
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S), dtype=np.int32))}
+    reqs = [Request(req_id=i,
+                    tokens=rng.integers(0, cfg.vocab, (s,), dtype=np.int32),
+                    n_new=trace["n_new"], priority=i % 2)
+            for i, s in enumerate(trace["prompt_lens"])]
+    pages_demanded = sum(-(-len(r.tokens) // pool_cfg.page_size) +
+                         -(-r.n_new // pool_cfg.page_size) for r in reqs)
+    print(f"trace demands ~{pages_demanded} pages raw; slab holds "
+          f"{pool_cfg.num_pages} — completion requires compressed parking")
 
-    plain = Engine(model, params)
-    toks_plain, cache = plain.generate(batch, new_tokens)
+    eng = Engine(model, params, pool=pool_cfg)
+    outputs, stats, pool = eng.serve(reqs, max_batch=trace["max_batch"])
+    assert len(outputs) == len(reqs), "trace did not complete"
+    assert stats.preemptions >= 1, "trace never exercised compress-parking"
 
-    comp = Engine(model, params,
-                  kv_compress=KVCompressionConfig(enabled=True, eb=1e-4, min_leaf_size=4096))
-    toks_comp, _ = comp.generate(batch, new_tokens, park_between=True)
+    slab = pool_cfg.num_pages * pool.slot_bytes
+    print(f"\ncompleted {stats.completed} requests in {stats.decode_steps} "
+          f"decode steps: {stats.admissions} admissions, "
+          f"{stats.preemptions} preemptions (compress-park), "
+          f"{stats.resumes} resumes, {stats.tiered_pages} pages tiered cold")
+    print(f"pool memory high-water: {stats.high_water_used_bytes / 1e3:.1f} KB "
+          f"(raw slab in use + compressed payloads) vs "
+          f"{stats.high_water_demand_bytes / 1e3:.1f} KB had all live pages "
+          f"stayed raw ({stats.high_water_demand_bytes / max(stats.high_water_used_bytes, 1):.2f}x)"
+          f"; preallocated slab {slab / 1e3:.1f} KB")
 
-    parked = comp.park(cache)
-    raw = cache_bytes(cache)
-    packed = compressed_cache_bytes(parked)
-    agree = float(jnp.mean((toks_plain == toks_comp).astype(jnp.float32)))
-    print(f"KV cache: {raw / 1e6:.1f} MB -> {packed / 1e6:.1f} MB "
-          f"({raw / packed:.2f}x) at eb=1e-4")
-    print(f"decode-token agreement plain vs parked-every-step: {agree * 100:.1f}%")
-    print("sample continuation (plain): ", np.asarray(toks_plain[0][:10]))
-    print("sample continuation (parked):", np.asarray(toks_comp[0][:10]))
+    # parity vs. the never-parked whole-cache oracle
+    agrees = []
+    for r in reqs:
+        oracle, _ = eng.generate({"tokens": jnp.asarray(r.tokens)[None]}, r.n_new)
+        agrees.append(float((np.asarray(oracle[0]) == outputs[r.req_id]).mean()))
+    mean_agree = float(np.mean(agrees))
+    print(f"decode-token agreement, pooled (parked) vs never-parked oracle "
+          f"at eb={pool_cfg.eb:g}: {mean_agree * 100:.1f}% "
+          f"(per request: {[f'{a:.2f}' for a in agrees]})")
+    print("sample continuation (pooled):", outputs[reqs[0].req_id][:10])
+    assert mean_agree >= 0.9, f"parked decode diverged from oracle: {agrees}"
 
 
 if __name__ == "__main__":

@@ -12,7 +12,12 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=1}"
 
 tier="${1:-fast}"
 case "$tier" in
-  fast) exec python -m pytest -q -m "not slow" ;;
+  fast)
+    python -m pytest -q -m "not slow"
+    # kvpool smoke: tiny model, 2-page pool, 8-step trace — drives the full
+    # continuous-batching scheduler (admit/tier/preempt/resume) on every PR
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke
+    ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -q ;;
   *)    echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

@@ -124,6 +124,26 @@ def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
     """Error-bounded lossy compression of a 1-3D float array."""
     data = data.astype(jnp.float32)
     eb = resolve_eb(data, cfg)
+    return _compress_core(data, eb, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def compress_with_eb(data: jax.Array, eb_abs: jax.Array, cfg: FZConfig) -> FZCompressed:
+    """Compress with a caller-supplied *absolute* error bound (traced scalar).
+
+    Page-granular compression (serve/kvpool) needs every chunk of a tensor
+    quantized against one shared bound: the reconstruction grid is then
+    ``round(x / 2eb) * 2eb`` independent of how the tensor was chunked, so
+    per-page roundtrips are bit-identical to a whole-tensor roundtrip. Because
+    ``eb_abs`` is traced (not baked into ``cfg``), all same-shaped pages share
+    a single jit trace.
+    """
+    data = data.astype(jnp.float32)
+    eb = jnp.maximum(jnp.asarray(eb_abs, jnp.float32), jnp.float32(1e-30))
+    return _compress_core(data, eb, cfg)
+
+
+def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig) -> FZCompressed:
     quantize, shuffle_encode, _ = _stages(cfg)
     codes, oidx, oval, n_over = quantize(
         data, eb, code_mode=cfg.code_mode,

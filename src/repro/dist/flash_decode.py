@@ -23,6 +23,40 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def decode_partials(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    length: jax.Array, *,
+                    shard_offset: jax.Array | int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-decoding partials over one contiguous slice of the KV sequence.
+
+    q: (B, H, D); k_cache/v_cache: (B, S_slice, KVH, D); length: (B,) global
+    valid prefix; ``shard_offset``: global position of this slice's first
+    cache slot. Returns ``(m_local, num, den)`` with shapes
+    (B, KVH, G), (B, KVH, G, D), (B, KVH, G) — the running max, weighted-value
+    numerator and exp-sum denominator of the online softmax, renormalizable
+    against any global max (an entirely-masked slice yields m_local == NEG_INF
+    and zero num/den, so its renorm weight is exactly 0).
+
+    Shared by the sequence-sharded path below (combine = pmax/psum over a mesh
+    axis) and by serve/kvpool's paged decode attention (combine = max/sum over
+    the page axis); both keep models/attention.decode_attention as the oracle.
+    """
+    B, H, D = q.shape
+    S_slice, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = shard_offset + jnp.arange(S_slice)
+    valid = pos[None, :] < length[:, None]                       # (B, S_slice)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m_local = jnp.max(s, axis=-1)                                # (B, KVH, G)
+    p = jnp.exp(s - m_local[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)               # empty-slice safety
+    num = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    den = jnp.sum(p, axis=-1)
+    return m_local, num, den
+
+
 def flash_decode_shard(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                        length: jax.Array, *, axis: str,
                        shard_offset: jax.Array | int) -> jax.Array:
@@ -35,20 +69,8 @@ def flash_decode_shard(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     over ``axis``.
     """
     B, H, D = q.shape
-    S_shard, KVH = k_cache.shape[1], k_cache.shape[2]
-    G = H // KVH
-    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * D ** -0.5
-    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
-    pos = shard_offset + jnp.arange(S_shard)
-    valid = pos[None, :] < length[:, None]                       # (B, S_shard)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-
-    m_local = jnp.max(s, axis=-1)                                # (B, KVH, G)
-    p = jnp.exp(s - m_local[..., None])
-    p = jnp.where(valid[:, None, None, :], p, 0.0)               # empty-shard safety
-    num = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
-    den = jnp.sum(p, axis=-1)
-
+    m_local, num, den = decode_partials(q, k_cache, v_cache, length,
+                                        shard_offset=shard_offset)
     m_global = jax.lax.pmax(m_local, axis)
     corr = jnp.exp(m_local - m_global)                           # 0 for empty shards
     num = jax.lax.psum(num * corr[..., None], axis)

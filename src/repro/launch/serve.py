@@ -1,7 +1,10 @@
-"""Serving launcher: batched prefill + greedy decode, optional FZ KV parking.
+"""Serving launcher: batched prefill + greedy decode, optional FZ KV parking
+or the paged FZ KV pool with continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
         --prompt-len 128 --tokens 16 --kv-compress
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
+        --prompt-len 64 --tokens 16 --paged --pool-pages 8 --page-size 16
 """
 from __future__ import annotations
 
@@ -17,6 +20,11 @@ def main() -> None:
     p.add_argument("--tokens", type=int, default=16)
     p.add_argument("--kv-compress", action="store_true")
     p.add_argument("--kv-eb", type=float, default=1e-4)
+    p.add_argument("--paged", action="store_true",
+                   help="serve through the paged KV pool (repro.serve.kvpool)")
+    p.add_argument("--pool-pages", type=int, default=8)
+    p.add_argument("--page-size", type=int, default=16)
+    p.add_argument("--cold-after", type=int, default=2)
     args = p.parse_args()
 
     import jax
@@ -24,13 +32,37 @@ def main() -> None:
     import numpy as np
     from repro import configs
     from repro.models import zoo
-    from repro.serve import Engine, KVCompressionConfig
+    from repro.serve import Engine, KVCompressionConfig, PoolConfig, Request
     from repro.serve.engine import cache_bytes, compressed_cache_bytes
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     model = zoo.build(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
+
+    if args.paged:
+        cap = args.page_size * -(-(args.prompt_len + args.tokens + 1)
+                                 // args.page_size)
+        pool_cfg = PoolConfig(num_pages=args.pool_pages,
+                              page_size=args.page_size,
+                              seq_capacity=cap, cold_after=args.cold_after,
+                              eb=args.kv_eb)
+        eng = Engine(model, params, pool=pool_cfg)
+        reqs = [Request(req_id=i,
+                        tokens=rng.integers(0, cfg.vocab, (args.prompt_len,),
+                                            dtype=np.int32),
+                        n_new=args.tokens, priority=i % 2)
+                for i in range(args.batch)]
+        outputs, stats, pool = eng.serve(reqs, max_batch=min(args.batch, 4))
+        print(f"{cfg.arch_id}: {stats.completed} requests in "
+              f"{stats.decode_steps} decode steps "
+              f"({stats.preemptions} preempt / {stats.resumes} resume / "
+              f"{stats.tiered_pages} tiered)")
+        print(f"pool high-water {stats.high_water_used_bytes / 1e6:.2f} MB vs "
+              f"{stats.high_water_demand_bytes / 1e6:.2f} MB raw demand")
+        print("first sequence:", outputs[0])
+        return
+
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len), dtype=np.int32))}
     if cfg.mrope_sections is not None:

@@ -161,7 +161,15 @@ def init_cache(cfg: ArchConfig, B: int, S: int, dtype=jnp.bfloat16) -> dict:
 
 
 def forward_prefill(params: dict, cfg: ArchConfig, batch: dict):
-    """Returns (last-position logits, populated cache)."""
+    """Returns (last-position logits, populated cache).
+
+    Optional ``batch["lengths"]`` (B,) marks the true prompt lengths when
+    ``tokens`` is right-padded (serve/kvpool pads prompts to page multiples
+    so prefill compiles once per bucket, not once per prompt length): logits
+    are taken at position ``lengths-1`` and the cache length is ``lengths``.
+    Padded positions still write K/V, but causal masking keeps true-position
+    outputs exact and decode masks the tail by length.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     Smax = cache_len(S)
@@ -186,9 +194,17 @@ def forward_prefill(params: dict, cfg: ArchConfig, batch: dict):
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"])
-    x = nn.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    if "lengths" in batch:
+        lengths = batch["lengths"].astype(jnp.int32)
+        idx = (lengths - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(idx, (B, 1, x.shape[-1])),
+                                     axis=1)[:, 0]
+    else:
+        lengths = jnp.full((B,), S, jnp.int32)
+        x_last = x[:, -1]
+    x = nn.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
     logits = nn.dense(x, params["unembed"])
-    cache = {"k": ks, "v": vs, "length": jnp.full((B,), S, jnp.int32)}
+    cache = {"k": ks, "v": vs, "length": lengths}
     return logits, cache
 
 

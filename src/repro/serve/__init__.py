@@ -1,1 +1,34 @@
-from .engine import Engine, KVCompressionConfig, compress_cache, decompress_cache  # noqa: F401
+"""repro.serve — the serving stack over FZ in-memory compression.
+
+Architecture (paper §2.4, "in-memory compression" deployed):
+
+  * ``engine.Engine`` — jit-cached prefill/decode steps plus two KV regimes:
+      - the **whole-cache path** (``park``/``resume``: one monolithic FZ
+        roundtrip per cache) — retained as the *parity oracle*: page-granular
+        compression at a shared absolute bound reconstructs bit-identically
+        to it (tests/test_kvpool.py);
+      - the **paged pool path** (``Engine.serve``) — production-shaped.
+  * ``kvpool`` — the pool subsystem:
+      - *page size*: fixed token pages (``PoolConfig.page_size``) over all
+        layers, stored in one preallocated device slab of
+        ``PoolConfig.num_pages`` physical slots;
+      - *tiering policy*: hot pages raw; pages unwritten for
+        ``cold_after`` scheduler steps are FZ-compressed in place (fixed-shape
+        containers, one shared absolute error bound, single jit trace), which
+        frees their slots — reads decompress transiently, writes promote back
+        to raw;
+      - *scheduler states*: WAITING -> RUNNING (admit = prefill into raw
+        pages) -> PARKED (preempt = compress-park, nothing recomputed) ->
+        RUNNING (resume = promote tail page) -> FINISHED, driven by
+        ``ContinuousBatcher`` with priority-aware admission and
+        lowest-priority/latest-arrival victim selection under memory pressure.
+
+Capacity accounting is built on the FZ container's ``used_bytes()`` (actual
+payload) and ``wire_bytes()`` (capacity-sized footprint); the pool reports
+both against the raw demand of the same live pages.
+"""
+from . import kvpool  # noqa: F401
+from .engine import (Engine, KVCompressionConfig, cache_bytes,  # noqa: F401
+                     compress_cache, compressed_cache_bytes, decompress_cache)
+from .kvpool import (ContinuousBatcher, PagePool, PoolConfig,  # noqa: F401
+                     Request, TieredPolicy, TraceStats)

@@ -1,13 +1,22 @@
-"""Serving engine: batched prefill + greedy decode with optional FZ KV pages.
+"""Serving engine: batched prefill + greedy decode with FZ-compressed KV.
 
-The KV-cache compression path is the paper's "in-memory compression" use case
-(§2.4): after prefill the (huge) KV cache is FZ-compressed in device memory;
-a decode session decompresses it once on resume. This models serve-time cache
-parking / request swapping (vLLM-style preemption), where evicted sequences'
-caches are held compressed instead of being recomputed.
+Two cache regimes, both the paper's "in-memory compression" use case (§2.4 —
+FZ is fast enough to (de)compress live device-resident state at serving
+latency, which cuSZ-class compressors cannot do):
 
-Measured in benchmarks/bench_kvcache.py: memory ratio and the logit deviation
-of decode steps running on a reconstructed cache.
+  * **whole-cache parking** (``park``/``resume``): one monolithic cache is
+    FZ-compressed between decode sessions. This is the original toy path,
+    kept as the *parity oracle* for the pool below — at a shared absolute
+    error bound a page-granular roundtrip reconstructs bit-identically to it.
+  * **paged pool** (``serve``): production-shaped path. KV lives as
+    fixed-size token pages in a preallocated slab (serve/kvpool); cold pages
+    are FZ-compressed in place, preemption is compress-park, and a
+    continuous-batching scheduler drives admit/step/preempt/resume. Decode
+    gathers a sequence's pages into the fixed-width cache and runs the
+    model's decode step on it.
+
+Measured in benchmarks/bench_kvcache.py: memory ratio, park/resume latency,
+and the logit deviation of decode steps running on a reconstructed cache.
 """
 from __future__ import annotations
 
@@ -20,16 +29,20 @@ import jax.numpy as jnp
 from repro.core import fz
 from repro.models import zoo
 
+from . import kvpool
+
 
 @dataclasses.dataclass(frozen=True)
 class KVCompressionConfig:
     enabled: bool = False
-    eb: float = 1e-3               # relative error bound on K/V values
+    eb: float = 1e-3               # error bound on K/V values
+    eb_mode: str = "rel"           # "rel" (per-leaf range) | "abs"
     min_leaf_size: int = 65_536
+    use_kernels: bool = False      # route FZ hot stages through Pallas kernels
 
     def fz_config(self) -> fz.FZConfig:
-        return fz.FZConfig(eb=self.eb, eb_mode="rel", exact_outliers=False,
-                           use_kernels=False)
+        return fz.FZConfig(eb=self.eb, eb_mode=self.eb_mode,
+                           exact_outliers=False, use_kernels=self.use_kernels)
 
 
 def compress_cache(cache: dict, kcfg: KVCompressionConfig) -> dict:
@@ -72,17 +85,29 @@ def compressed_cache_bytes(comp: dict) -> int:
 
 
 class Engine:
-    """Minimal batched serving session."""
+    """Batched serving session: whole-cache oracle path + paged pool path."""
 
-    def __init__(self, model: zoo.Model, params, *, kv_compress: KVCompressionConfig | None = None):
+    def __init__(self, model: zoo.Model, params, *,
+                 kv_compress: KVCompressionConfig | None = None,
+                 pool: kvpool.PoolConfig | None = None):
         self.model = model
         self.params = params
         self.kcfg = kv_compress or KVCompressionConfig()
+        self.pool_cfg = pool
+        # both step functions are jitted once here; re-wrapping per call
+        # (the old prefill bug) would retrace on every request
         self._decode = jax.jit(lambda p, c, t: model.decode(p, c, t))
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b))
 
     def prefill(self, batch: dict):
-        logits, cache = jax.jit(self.model.prefill)(self.params, batch)
+        logits, cache = self._prefill(self.params, batch)
         return logits, cache
+
+    def decode_step(self, cache: dict, tokens: jax.Array):
+        """One decode step on an explicit cache (the pool's gathered view)."""
+        return self._decode(self.params, cache, tokens)
+
+    # -- whole-cache parking (parity oracle for the pool) ----------------------
 
     def park(self, cache: dict) -> dict:
         """Compress a cache for in-memory parking (request preempted)."""
@@ -103,3 +128,30 @@ class Engine:
             logits, cache = self._decode(self.params, cache, tokens[-1])
             tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
         return jnp.stack(tokens, axis=1), cache
+
+    # -- paged pool path -------------------------------------------------------
+
+    def make_pool(self) -> kvpool.PagePool:
+        """Instantiate the paged KV pool for this model's cache geometry."""
+        if self.pool_cfg is None:
+            raise ValueError("Engine was built without a PoolConfig")
+        cfg = self.model.cfg
+        cache = jax.eval_shape(lambda: self.model.make_cache(1, 1))
+        if set(cache) != {"k", "v", "length"} or cfg.mrope_sections is not None:
+            raise NotImplementedError(
+                f"paged KV pool supports plain k/v/length caches; "
+                f"{cfg.arch_id} has {sorted(cache)}")
+        return kvpool.PagePool(self.pool_cfg, n_layers=cfg.n_layers,
+                               n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd)
+
+    def serve(self, requests: list[kvpool.Request], *, max_batch: int = 2,
+              pool: kvpool.PagePool | None = None):
+        """Run a request trace through the pool with continuous batching.
+
+        Returns ``(outputs, stats, pool)`` where outputs maps req_id to the
+        generated token array.
+        """
+        pool = pool or self.make_pool()
+        batcher = kvpool.ContinuousBatcher(self, pool, max_batch=max_batch)
+        outputs, stats = batcher.run(requests)
+        return outputs, stats, pool

@@ -1,0 +1,28 @@
+"""repro.serve.kvpool — paged, FZ-compressed KV-cache pool.
+
+The subsystem that turns the compressor into serving capacity (paper §2.4,
+"in-memory compression"): KV state lives as fixed-size token pages in a
+preallocated device slab, hot pages raw, cold pages FZ-compressed in place,
+and a continuous-batching scheduler whose preemption path is compress-park
+rather than drop-and-recompute.
+
+Modules:
+  * ``pool``      — block allocator + page table (:class:`PagePool`), page
+                    states raw|compressed|free, capacity accounting on
+                    ``used_bytes()`` / ``wire_bytes()``;
+  * ``policy``    — tiering (cold-after-N), forced reclaim, victim selection
+                    (:class:`TieredPolicy`);
+  * ``scheduler`` — :class:`ContinuousBatcher`: admit / step / preempt /
+                    resume over a request trace;
+  * ``attention`` — page-native decode attention built on the same
+                    flash-decoding partials as ``dist.flash_decode``.
+
+The whole-cache park/resume in ``serve.engine`` (compress_cache /
+decompress_cache) is retained as the parity oracle: at a shared absolute
+error bound, page-granular park -> resume is bit-identical to the
+whole-cache roundtrip (tests/test_kvpool.py).
+"""
+from .attention import paged_decode_attention, pages_from_cache  # noqa: F401
+from .policy import TieredPolicy  # noqa: F401
+from .pool import COMPRESSED, FREE, RAW, Page, PagePool, PoolConfig, PoolStats  # noqa: F401
+from .scheduler import ContinuousBatcher, Request, SeqRecord, TraceStats  # noqa: F401

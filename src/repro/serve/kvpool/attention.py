@@ -1,0 +1,54 @@
+"""Paged decode attention: flash-decoding partials per page, combined locally.
+
+Reuses ``repro.dist.flash_decode.decode_partials`` — the same per-slice
+(running max, exp-sum denominator, weighted-value numerator) math that the
+sequence-sharded serving path combines with pmax/psum across a mesh axis —
+but combines over the *page* axis on one device. Pages past a sequence's
+valid length contribute exactly zero (their local max is the finite NEG_INF
+stand-in, so the renormalization weight underflows to 0), which is what lets
+the pool gather fixed-width page lists with zero padding.
+
+``models.attention.decode_attention`` over the contiguous gathered cache is
+the oracle; parity is pinned in tests/test_kvpool.py. The engine's decode
+path runs the model's own (contiguous) attention on the gathered cache — this
+module is the page-native formulation that a future Pallas paged-attention
+kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import flash_decode
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           length: jax.Array) -> jax.Array:
+    """q: (B, H, D); k_pages/v_pages: (B, P, ps, KVH, D); length: (B,) global
+    valid prefix over the concatenated pages. Returns (B, H, D) in q.dtype."""
+    B, P, ps, KVH, D = k_pages.shape
+    offsets = jnp.arange(P, dtype=jnp.int32) * ps
+
+    def per_page(kp, vp, off):       # kp/vp: (B, ps, KVH, D)
+        return flash_decode.decode_partials(q, kp, vp, length,
+                                            shard_offset=off)
+
+    m, num, den = jax.vmap(per_page, in_axes=(1, 1, 0))(k_pages, v_pages,
+                                                        offsets)
+    m_global = jnp.max(m, axis=0)                       # (B, KVH, G)
+    corr = jnp.exp(m - m_global)                        # 0 for empty pages
+    num = jnp.sum(num * corr[..., None], axis=0)
+    den = jnp.sum(den * corr, axis=0)
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    H = q.shape[1]
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def pages_from_cache(k_cache: jax.Array, v_cache: jax.Array, page_size: int):
+    """Reshape contiguous caches (B, S, KVH, D) into (B, P, ps, KVH, D)."""
+    B, S, KVH, D = k_cache.shape
+    if S % page_size:
+        raise ValueError(f"cache length {S} not a multiple of page_size")
+    P = S // page_size
+    return (k_cache.reshape(B, P, page_size, KVH, D),
+            v_cache.reshape(B, P, page_size, KVH, D))

@@ -1,0 +1,368 @@
+"""Paged KV-cache pool: block allocator + page table + FZ compression tiers.
+
+The device-resident half of the kvpool subsystem. A ``PagePool`` owns one
+preallocated slab of physical page slots
+
+    slots : (num_pages, 2, L, page_size, KVH, hd)     # [k|v] x layers x tokens
+
+and a host-side page table mapping each sequence to a list of logical pages.
+Every logical page is in exactly one of two states:
+
+  * ``raw``        — backed by a physical slot in the slab (hot tier);
+  * ``compressed`` — held as a fixed-shape :class:`repro.core.fz.FZCompressed`
+                     container with *no* slot (cold tier); reads decompress
+                     transiently, writes require promotion back to raw.
+
+Physical slots not backing any page are ``free``. Compressing a page frees
+its slot — that is the capacity mechanism: a pool of N raw slots can hold far
+more than N pages' worth of live KV state, which is exactly the paper's §2.4
+in-memory-compression pitch (FZ is fast enough to (de)compress device-resident
+state at serving latency, so cold pages are *storage*, not tombstones).
+
+Error-bound discipline: all pages compress against one shared absolute bound
+(``fz.compress_with_eb``), resolved once from the first KV data the pool sees
+(or taken verbatim in ``eb_mode="abs"``). A shared bound makes the
+reconstruction grid ``round(x / 2eb) * 2eb`` independent of page chunking, so
+park -> resume through pages is bit-identical to a whole-cache
+``serve.engine.compress_cache`` / ``decompress_cache`` roundtrip at the same
+bound (pinned in tests/test_kvpool.py) — and every page shares a single jit
+trace because the bound is traced, not baked into the static config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fz
+
+FREE = "free"
+RAW = "raw"
+COMPRESSED = "compressed"
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static pool configuration.
+
+    ``num_pages`` bounds the *raw* (hot) tier only; total live state can
+    exceed it via the compressed tier. ``seq_capacity`` is the fixed gather
+    width: decode always sees a (L, B, seq_capacity, KVH, hd) cache so the
+    decode step compiles exactly once per lane count.
+    """
+    num_pages: int = 16
+    page_size: int = 16            # tokens per page
+    seq_capacity: int = 256        # max tokens per sequence (gather width)
+    cold_after: int = 4            # steps without a write before a page tiers down
+    eb: float = 1e-4               # error bound for parked pages
+    eb_mode: str = "rel"           # "rel": resolved once from first KV data; "abs"
+    use_kernels: bool = False      # route FZ hot stages through Pallas kernels
+    exact_outliers: bool = False   # match serve.KVCompressionConfig default
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.seq_capacity % self.page_size:
+            raise ValueError("seq_capacity must be a multiple of page_size")
+        if self.num_pages < 2:
+            raise ValueError("need at least 2 physical pages")
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.seq_capacity // self.page_size
+
+    def fz_config(self) -> fz.FZConfig:
+        # eb/eb_mode here are only a fallback identity; page compression goes
+        # through compress_with_eb with the pool's shared resolved bound.
+        return fz.FZConfig(eb=self.eb, eb_mode="abs",
+                           exact_outliers=self.exact_outliers,
+                           use_kernels=self.use_kernels)
+
+
+@dataclasses.dataclass
+class Page:
+    """Page-table entry (host side)."""
+    page_id: int
+    seq: int
+    index: int                     # page index within its sequence
+    slot: int | None = None        # physical slot when raw
+    comp: fz.FZCompressed | None = None
+    last_write: int = 0            # scheduler step of the last write
+
+    @property
+    def state(self) -> str:
+        return RAW if self.slot is not None else COMPRESSED
+
+
+@dataclasses.dataclass
+class PoolStats:
+    compressions: int = 0
+    decompressions: int = 0        # transient cold reads + promotions
+    high_water_slots: int = 0      # max physical slots simultaneously raw
+    high_water_bytes: int = 0      # max raw-slab-in-use + compressed used_bytes
+    high_water_demand_bytes: int = 0  # max live pages held fully raw
+
+
+# ---------------------------------------------------------------------------
+# jit data plane (traced indices -> one trace per shape, not per call site)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _zero_slot(slots, slot):
+    return slots.at[slot].set(jnp.zeros((), slots.dtype))
+
+
+@jax.jit
+def _set_slot(slots, slot, page):
+    return slots.at[slot].set(page.astype(slots.dtype))
+
+
+@jax.jit
+def _set_token(slots, slot, off, k_vec, v_vec):
+    """Write one token's K/V (each (L, KVH, hd)) into a page at ``off``."""
+    slots = slots.at[slot, 0, :, off].set(k_vec.astype(slots.dtype))
+    return slots.at[slot, 1, :, off].set(v_vec.astype(slots.dtype))
+
+
+@partial(jax.jit, static_argnames=("ps", "n_pages"))
+def _paginate(k, v, ps: int, n_pages: int):
+    """Chop a prefill cache (L, 1, Smax, KVH, hd) into (P, 2, L, ps, KVH, hd)."""
+    L, _, S, KVH, hd = k.shape
+    if n_pages * ps > S:
+        pad = n_pages * ps - S
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = k[:, 0, : n_pages * ps].reshape(L, n_pages, ps, KVH, hd)
+    vp = v[:, 0, : n_pages * ps].reshape(L, n_pages, ps, KVH, hd)
+    return jnp.stack([kp, vp], axis=2).transpose(1, 2, 0, 3, 4, 5)
+
+
+class PagePool:
+    """Block allocator + page table over one preallocated KV slab."""
+
+    def __init__(self, cfg: PoolConfig, *, n_layers: int, n_kv_heads: int,
+                 head_dim: int):
+        self.cfg = cfg
+        self.page_shape = (2, n_layers, cfg.page_size, n_kv_heads, head_dim)
+        dt = jnp.dtype(cfg.dtype)
+        self.slots = jnp.zeros((cfg.num_pages, *self.page_shape), dt)
+        self._zero_page = jnp.zeros(self.page_shape, dt)
+        self.free_slots: list[int] = list(range(cfg.num_pages))
+        self.pages: dict[int, Page] = {}
+        self.seq_pages: dict[int, list[int]] = {}
+        self.seq_len: dict[int, int] = {}
+        self._next_page = 0
+        self.eb_abs: jax.Array | None = None
+        self._fzc = cfg.fz_config()
+        self.stats = PoolStats()
+
+    # -- geometry / accounting ------------------------------------------------
+
+    @property
+    def slot_bytes(self) -> int:
+        return math.prod(self.page_shape) * self.slots.dtype.itemsize
+
+    def n_free_slots(self) -> int:
+        return len(self.free_slots)
+
+    def slot_states(self) -> list[str]:
+        """Per physical slot: free|raw (compressed pages hold no slot)."""
+        out = [FREE] * self.cfg.num_pages
+        for p in self.pages.values():
+            if p.slot is not None:
+                out[p.slot] = RAW
+        return out
+
+    def pages_of(self, seq: int) -> list[Page]:
+        return [self.pages[i] for i in self.seq_pages.get(seq, [])]
+
+    def raw_bytes_in_use(self) -> int:
+        return (self.cfg.num_pages - len(self.free_slots)) * self.slot_bytes
+
+    def compressed_used_bytes(self) -> int:
+        return sum(int(p.comp.used_bytes()) for p in self.pages.values()
+                   if p.comp is not None)
+
+    def compressed_wire_bytes(self) -> int:
+        """Capacity-sized footprint if containers sit in fixed-shape arenas."""
+        return sum(p.comp.wire_bytes() for p in self.pages.values()
+                   if p.comp is not None)
+
+    def used_bytes(self) -> int:
+        """Raw slab in use + actual compressed payload bytes."""
+        return self.raw_bytes_in_use() + self.compressed_used_bytes()
+
+    def live_demand_bytes(self) -> int:
+        """What the same live pages would occupy held fully raw."""
+        return len(self.pages) * self.slot_bytes
+
+    def note_high_water(self) -> None:
+        """Sample peaks at allocation/promotion time (the true maxima —
+        end-of-step sampling would miss admit-then-park within one step)."""
+        self.stats.high_water_slots = max(
+            self.stats.high_water_slots,
+            self.cfg.num_pages - len(self.free_slots))
+        self.stats.high_water_bytes = max(self.stats.high_water_bytes,
+                                          self.used_bytes())
+        self.stats.high_water_demand_bytes = max(
+            self.stats.high_water_demand_bytes, self.live_demand_bytes())
+
+    # -- error bound ----------------------------------------------------------
+
+    def _ensure_eb(self, sample: jax.Array) -> None:
+        if self.eb_abs is None:
+            rcfg = fz.FZConfig(eb=self.cfg.eb, eb_mode=self.cfg.eb_mode)
+            self.eb_abs = fz.resolve_eb(
+                sample.astype(jnp.float32).reshape(-1), rcfg)
+
+    # -- allocator ------------------------------------------------------------
+
+    def alloc_page(self, seq: int, step: int) -> int | None:
+        """Allocate (and zero) a fresh raw page for ``seq``; None if no slot."""
+        if not self.free_slots:
+            return None
+        slot = self.free_slots.pop()
+        self.slots = _zero_slot(self.slots, slot)
+        pid = self._next_page
+        self._next_page += 1
+        self.pages[pid] = Page(pid, seq, len(self.seq_pages.setdefault(seq, [])),
+                               slot=slot, last_write=step)
+        self.seq_pages[seq].append(pid)
+        self.seq_len.setdefault(seq, 0)
+        self.note_high_water()
+        return pid
+
+    def free_seq(self, seq: int) -> None:
+        for pid in self.seq_pages.pop(seq, []):
+            page = self.pages.pop(pid)
+            if page.slot is not None:
+                self.free_slots.append(page.slot)
+        self.seq_len.pop(seq, None)
+
+    # -- tiering --------------------------------------------------------------
+
+    def compress_page(self, pid: int) -> None:
+        """Raw -> compressed: FZ the page contents, release the slot."""
+        page = self.pages[pid]
+        if page.slot is None:
+            return
+        flat = self.slots[page.slot].astype(jnp.float32).reshape(-1)
+        self._ensure_eb(flat)
+        page.comp = fz.compress_with_eb(flat, self.eb_abs, self._fzc)
+        self.free_slots.append(page.slot)
+        page.slot = None
+        self.stats.compressions += 1
+
+    def promote_page(self, pid: int, step: int) -> bool:
+        """Compressed -> raw (needed before a write); False if no free slot."""
+        page = self.pages[pid]
+        if page.slot is not None:
+            return True
+        if not self.free_slots:
+            return False
+        data = self._decompress(page)
+        slot = self.free_slots.pop()
+        self.slots = _set_slot(self.slots, slot, data)
+        page.slot, page.comp, page.last_write = slot, None, step
+        self.note_high_water()
+        return True
+
+    def _decompress(self, page: Page) -> jax.Array:
+        self.stats.decompressions += 1
+        rec = fz.decompress(page.comp, self._fzc)
+        return rec.reshape(self.page_shape).astype(self.slots.dtype)
+
+    def page_data(self, pid: int) -> jax.Array:
+        """Page contents (2, L, ps, KVH, hd); cold pages decompress transiently."""
+        page = self.pages[pid]
+        if page.slot is not None:
+            return self.slots[page.slot]
+        return self._decompress(page)
+
+    # -- writes ---------------------------------------------------------------
+
+    def write_prefill(self, seq: int, k: jax.Array, v: jax.Array, length: int,
+                      step: int) -> bool:
+        """Ingest a prefill cache (L, 1, Smax, KVH, hd) as raw pages."""
+        ps = self.cfg.page_size
+        n_pages = max(1, -(-length // ps))
+        if length > self.cfg.seq_capacity:
+            raise ValueError(f"prompt of {length} tokens exceeds seq_capacity "
+                             f"{self.cfg.seq_capacity}")
+        if n_pages > len(self.free_slots):
+            return False
+        self._ensure_eb(k)
+        pages = _paginate(k, v, ps, n_pages)
+        for j in range(n_pages):
+            pid = self.alloc_page(seq, step)
+            assert pid is not None
+            self.slots = _set_slot(self.slots, self.pages[pid].slot, pages[j])
+        self.seq_len[seq] = length
+        return True
+
+    def append_token(self, seq: int, k_vec: jax.Array, v_vec: jax.Array,
+                     step: int) -> bool:
+        """Write one decode step's K/V (each (L, KVH, hd)) at the tail.
+
+        The caller must have secured tail capacity (``tail_writable``); returns
+        False when it has not (no slot for a fresh page / promotion).
+        """
+        ps = self.cfg.page_size
+        pos = self.seq_len[seq]
+        if pos >= self.cfg.seq_capacity:
+            raise ValueError(f"sequence {seq} exceeds seq_capacity")
+        if pos % ps == 0:
+            if self.alloc_page(seq, step) is None:
+                return False
+        pid = self.seq_pages[seq][pos // ps]
+        page = self.pages[pid]
+        if page.slot is None and not self.promote_page(pid, step):
+            return False
+        self.slots = _set_token(self.slots, page.slot, pos % ps, k_vec, v_vec)
+        page.last_write = step
+        self.seq_len[seq] = pos + 1
+        return True
+
+    def tail_slot_demand(self, seq: int) -> int:
+        """Physical slots the next ``append_token`` for ``seq`` will consume:
+        1 if it opens a fresh page or must promote a compressed tail, else 0."""
+        pos = self.seq_len[seq]
+        if pos % self.cfg.page_size == 0:       # next write opens a new page
+            return 1
+        pid = self.seq_pages[seq][pos // self.cfg.page_size]
+        return 0 if self.pages[pid].slot is not None else 1
+
+    def tail_writable(self, seq: int) -> bool:
+        """Can the next ``append_token`` for ``seq`` proceed right now?"""
+        return self.tail_slot_demand(seq) <= len(self.free_slots)
+
+    # -- reads ----------------------------------------------------------------
+
+    def gather(self, lane_seqs: list[int | None]):
+        """Assemble the fixed-width decode cache for a set of lanes.
+
+        Returns ``{"k": (L, B, seq_capacity, KVH, hd), "v": ..., "length": (B,)}``
+        with empty lanes zero-filled at length 0. Cold pages are decompressed
+        transiently — reading never changes a page's tier.
+        """
+        P = self.cfg.max_pages_per_seq
+        lanes = []
+        lengths = []
+        for seq in lane_seqs:
+            pids = self.seq_pages.get(seq, []) if seq is not None else []
+            tensors = [self.page_data(pid) for pid in pids]
+            tensors += [self._zero_page] * (P - len(tensors))
+            lanes.append(jnp.stack(tensors))            # (P, 2, L, ps, KVH, hd)
+            lengths.append(self.seq_len.get(seq, 0) if seq is not None else 0)
+        arr = jnp.stack(lanes)                          # (B, P, 2, L, ps, KVH, hd)
+        B, _, _, L, ps, KVH, hd = arr.shape
+        kv = arr.transpose(2, 3, 0, 1, 4, 5, 6).reshape(2, L, B, P * ps, KVH, hd)
+        return {"k": kv[0], "v": kv[1],
+                "length": jnp.asarray(lengths, jnp.int32)}
+
+    def materialize(self, seq: int):
+        """One sequence's cache (L, 1, seq_capacity, KVH, hd) k/v + length."""
+        cache = self.gather([seq])
+        return cache["k"], cache["v"], self.seq_len[seq]

@@ -1,0 +1,276 @@
+"""Continuous batching over the paged FZ KV pool.
+
+vLLM-style serving loop at the scale of this repo: requests are admitted into
+a fixed number of decode *lanes* (the decode batch width, so the decode step
+compiles once), every step decodes one token for every running sequence, and
+memory pressure is resolved by *compress-parking* — a preempted sequence's
+pages are FZ-compressed in place and its lane freed; nothing is recomputed on
+resume. State machine per request:
+
+    WAITING --admit(prefill -> raw pages)--> RUNNING
+    RUNNING --preempt(compress all pages)--> PARKED
+    PARKED  --resume(promote tail page)----> RUNNING
+    RUNNING --n_new tokens emitted---------> FINISHED
+
+Scheduling order is (priority desc, arrival asc) for admission/resume and
+lowest-priority / latest-arrival for preemption (policy.TieredPolicy.victim).
+Every step also runs the routine cooling pass: pages unwritten for
+``cold_after`` steps tier down to compressed, which is what creates capacity
+for more concurrent sequences than the raw slab could hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .policy import TieredPolicy
+from .pool import PagePool
+
+WAITING, RUNNING, PARKED, FINISHED = "waiting", "running", "parked", "finished"
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    req_id: int
+    tokens: np.ndarray          # (S,) int32 prompt
+    n_new: int                  # tokens to generate (incl. the prefill argmax)
+    priority: int = 0           # higher wins admission / survives preemption
+
+
+@dataclasses.dataclass
+class SeqRecord:
+    req: Request
+    state: str = WAITING
+    lane: int | None = None
+    arrival: int = 0
+    generated: list[int] = dataclasses.field(default_factory=list)
+    last_token: int = 0
+
+
+@dataclasses.dataclass
+class TraceStats:
+    decode_steps: int = 0
+    admissions: int = 0
+    preemptions: int = 0
+    resumes: int = 0
+    completed: int = 0
+    tiered_pages: int = 0
+    high_water_used_bytes: int = 0     # raw slab in use + compressed payloads
+    high_water_demand_bytes: int = 0   # same live pages if held fully raw
+    pool_compressions: int = 0
+    pool_decompressions: int = 0
+
+
+@jax.jit
+def _extract_token(ks, vs, lane, pos):
+    """Pull one lane's step-written K/V (L, KVH, hd) out of the decode cache."""
+    return ks[:, lane, pos], vs[:, lane, pos]
+
+
+class ContinuousBatcher:
+    """admit / step / preempt / resume over a synthetic request trace."""
+
+    def __init__(self, engine, pool: PagePool, *, max_batch: int = 2,
+                 policy: TieredPolicy | None = None, max_steps: int = 10_000):
+        self.engine = engine
+        self.pool = pool
+        self.max_batch = max_batch
+        self.policy = policy or TieredPolicy(cold_after=pool.cfg.cold_after)
+        self.max_steps = max_steps
+        self.lanes: list[int | None] = [None] * max_batch
+        self.recs: dict[int, SeqRecord] = {}
+        self.stats = TraceStats()
+
+    # -- bookkeeping ----------------------------------------------------------
+
+    def _running(self) -> dict[int, tuple[int, int]]:
+        return {seq: (rec.req.priority, rec.arrival)
+                for seq, rec in self.recs.items() if rec.state == RUNNING}
+
+    def _protect(self) -> set[int]:
+        return self.policy.tail_pages(self.pool, self.lanes)
+
+    def _free_lane(self) -> int | None:
+        for i, seq in enumerate(self.lanes):
+            if seq is None:
+                return i
+        return None
+
+    def _park(self, seq: int, step: int) -> None:
+        rec = self.recs[seq]
+        self.policy.park(self.pool, seq)
+        self.lanes[rec.lane] = None
+        rec.lane, rec.state = None, PARKED
+        self.stats.preemptions += 1
+
+    def _finish(self, seq: int, outputs: dict) -> None:
+        rec = self.recs[seq]
+        outputs[rec.req.req_id] = np.asarray(rec.generated[: rec.req.n_new],
+                                             np.int32)
+        self.pool.free_seq(seq)
+        if rec.lane is not None:
+            self.lanes[rec.lane] = None
+        rec.lane, rec.state = None, FINISHED
+        self.stats.completed += 1
+
+    def _preempt_for(self, step: int, *, admitting_priority: int | None = None) -> bool:
+        """Park the policy victim to relieve pressure; returns True if parked.
+
+        ``admitting_priority`` set: pressure comes from *admission*, and only
+        running sequences with strictly lower priority are eligible victims.
+        ``None``: pressure comes from a running sequence's tail write — every
+        running sequence is eligible, including (as a last resort) the one
+        that needs the slot.
+        """
+        running = self._running()
+        if admitting_priority is not None:
+            running = {s: pa for s, pa in running.items()
+                       if pa[0] < admitting_priority}
+        victim = self.policy.victim(running)
+        if victim is None:
+            return False
+        self._park(victim, step)
+        return True
+
+    # -- admission / resume ---------------------------------------------------
+
+    def _admit(self, rec: SeqRecord, step: int, outputs: dict) -> bool:
+        prompt = np.asarray(rec.req.tokens, np.int32)
+        ps = self.pool.cfg.page_size
+        n_pages = max(1, -(-len(prompt) // ps))
+        while not self.policy.reclaim(self.pool, n_pages, self._protect()):
+            if not self._preempt_for(step, admitting_priority=rec.req.priority):
+                return False
+        # pad the prompt to its page bucket so prefill compiles once per
+        # bucket (max_pages_per_seq shapes), not once per prompt length;
+        # "lengths" makes the model take logits at the true last position
+        padded = np.zeros(n_pages * ps, np.int32)
+        padded[: len(prompt)] = prompt
+        logits, cache = self.engine.prefill(
+            {"tokens": jnp.asarray(padded)[None],
+             "lengths": jnp.asarray([len(prompt)], jnp.int32)})
+        seq = rec.req.req_id
+        if not self.pool.write_prefill(seq, cache["k"], cache["v"],
+                                       len(prompt), step):
+            return False
+        lane = self._free_lane()
+        tok = int(jnp.argmax(logits[0]))
+        rec.generated, rec.last_token = [tok], tok
+        rec.lane, rec.state, rec.arrival = lane, RUNNING, step
+        self.lanes[lane] = seq
+        self.stats.admissions += 1
+        if len(rec.generated) >= rec.req.n_new:
+            self._finish(seq, outputs)
+        return True
+
+    def _try_resume(self, rec: SeqRecord, step: int) -> bool:
+        seq = rec.req.req_id
+        if not self.policy.reclaim(self.pool, 1, self._protect()):
+            return False
+        lane = self._free_lane()
+        rec.lane, rec.state = lane, RUNNING
+        self.lanes[lane] = seq
+        self.stats.resumes += 1
+        return True
+
+    # -- the step -------------------------------------------------------------
+
+    def _secure_tails(self, step: int) -> None:
+        """Guarantee every running sequence can take this step's token write."""
+        while True:
+            # each pending append consumes at most one slot (fresh tail page
+            # or promotion of a compressed tail); reserve them all at once
+            reserve = sum(self.pool.tail_slot_demand(seq)
+                          for seq in self.lanes if seq is not None)
+            if reserve == 0 or self.policy.reclaim(self.pool, reserve,
+                                                   self._protect()):
+                return
+            if not self._preempt_for(step):
+                return                    # stall guard in run() handles this
+
+    def step(self, step: int, outputs: dict) -> bool:
+        """One scheduler iteration; returns True if any progress was made."""
+        progress = False
+        # 1. routine cooling
+        self.stats.tiered_pages += self.policy.tier(self.pool, step,
+                                                    self._protect())
+        # 2. resume parked, highest priority / oldest first
+        for rec in sorted((r for r in self.recs.values() if r.state == PARKED),
+                          key=lambda r: (-r.req.priority, r.arrival)):
+            if self._free_lane() is None:
+                break
+            progress |= self._try_resume(rec, step)
+        # 3. admit waiting
+        for rec in sorted((r for r in self.recs.values() if r.state == WAITING),
+                          key=lambda r: (-r.req.priority, r.req.req_id)):
+            if self._free_lane() is None:
+                break
+            progress |= self._admit(rec, step, outputs)
+        # 4. secure tail capacity (may compress-park under pressure)
+        self._secure_tails(step)
+        # 5. decode one token for every running lane
+        active = [(i, seq) for i, seq in enumerate(self.lanes) if seq is not None]
+        if active:
+            cache = self.pool.gather(self.lanes)
+            tokens = jnp.asarray(
+                [self.recs[s].last_token if s is not None else 0
+                 for s in self.lanes], jnp.int32)
+            logits, new_cache = self.engine.decode_step(cache, tokens)
+            for lane, seq in active:
+                rec = self.recs[seq]
+                pos = self.pool.seq_len[seq]
+                k_vec, v_vec = _extract_token(new_cache["k"], new_cache["v"],
+                                              lane, pos)
+                if not self.pool.append_token(seq, k_vec, v_vec, step):
+                    raise RuntimeError("kvpool invariant: tail write failed "
+                                       "after _secure_tails")
+                tok = int(jnp.argmax(logits[lane]))
+                rec.generated.append(tok)
+                rec.last_token = tok
+                if len(rec.generated) >= rec.req.n_new:
+                    self._finish(seq, outputs)
+            self.stats.decode_steps += 1
+            progress = True
+        # 6. accounting: the pool samples peaks at alloc/promote time (the
+        # true maxima); mirror them into the trace stats
+        self.stats.high_water_used_bytes = self.pool.stats.high_water_bytes
+        self.stats.high_water_demand_bytes = self.pool.stats.high_water_demand_bytes
+        return progress
+
+    def run(self, requests: list[Request]) -> tuple[dict[int, np.ndarray],
+                                                    TraceStats]:
+        """Drive the full trace; returns ({req_id: tokens}, stats)."""
+        ids = [r.req_id for r in requests]
+        if len(set(ids)) != len(ids):
+            raise ValueError("request ids must be unique")
+        cfg = self.pool.cfg
+        for r in requests:
+            need = len(np.asarray(r.tokens)) + r.n_new - 1
+            if need > cfg.seq_capacity:
+                raise ValueError(
+                    f"request {r.req_id}: prompt + n_new needs {need} token "
+                    f"slots > seq_capacity {cfg.seq_capacity}")
+            if -(-len(np.asarray(r.tokens)) // cfg.page_size) > cfg.num_pages:
+                raise ValueError(
+                    f"request {r.req_id}: prompt alone needs more pages than "
+                    f"the {cfg.num_pages}-slot slab")
+        self.recs = {r.req_id: SeqRecord(req=r) for r in requests}
+        outputs: dict[int, np.ndarray] = {}
+        stalled = 0
+        for step in range(1, self.max_steps + 1):
+            if all(r.state == FINISHED for r in self.recs.values()):
+                break
+            stalled = 0 if self.step(step, outputs) else stalled + 1
+            if stalled > 2:
+                raise RuntimeError(
+                    "kvpool scheduler stalled: pool too small for this trace "
+                    f"({self.pool.cfg.num_pages} pages, "
+                    f"{len(self.recs)} requests)")
+        else:
+            raise RuntimeError("kvpool scheduler exceeded max_steps")
+        self.stats.pool_compressions = self.pool.stats.compressions
+        self.stats.pool_decompressions = self.pool.stats.decompressions
+        return outputs, self.stats

@@ -1,0 +1,249 @@
+"""kvpool invariants: allocator aliasing, park/resume bit-parity with the
+whole-cache oracle, priority preemption, paged-attention parity, and a full
+synthetic trace with mixed sequence lengths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import zoo
+from repro.models.attention import decode_attention
+from repro.serve import (Engine, KVCompressionConfig, compress_cache,
+                         decompress_cache)
+from repro.serve.kvpool import (ContinuousBatcher, PagePool, PoolConfig,
+                                Request, TieredPolicy, paged_decode_attention,
+                                pages_from_cache)
+
+L, KVH, HD = 2, 2, 8     # tiny cache geometry for pool-only tests
+
+
+def make_pool(num_pages=8, ps=4, cap=32, **kw) -> PagePool:
+    cfg = PoolConfig(num_pages=num_pages, page_size=ps, seq_capacity=cap,
+                     eb=1e-3, eb_mode="abs", dtype="float32", **kw)
+    return PagePool(cfg, n_layers=L, n_kv_heads=KVH, head_dim=HD)
+
+
+def seq_kv(seed: int, S: int, fill=None):
+    """Synthetic prefill-shaped k/v: (L, 1, S, KVH, HD)."""
+    rng = np.random.default_rng(seed)
+    shp = (L, 1, S, KVH, HD)
+    if fill is not None:
+        return (jnp.full(shp, fill, jnp.float32),
+                jnp.full(shp, -fill, jnp.float32))
+    return (jnp.asarray(rng.standard_normal(shp), dtype=jnp.float32),
+            jnp.asarray(rng.standard_normal(shp), dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_alloc_free_never_aliases_live_pages():
+    pool = make_pool(num_pages=4, ps=4, cap=16)
+    ka, va = seq_kv(0, 8, fill=1.0)
+    kb, vb = seq_kv(1, 8, fill=2.0)
+    assert pool.write_prefill(0, ka, va, 8, step=0)
+    assert pool.write_prefill(1, kb, vb, 8, step=0)
+    assert pool.n_free_slots() == 0
+    b_before = np.asarray(pool.materialize(1)[0])
+
+    pool.free_seq(0)
+    assert pool.n_free_slots() == 2
+    # reuse the freed slots for a third sequence; seq 1 must be untouched
+    kc, vc = seq_kv(2, 8, fill=3.0)
+    assert pool.write_prefill(2, kc, vc, 8, step=1)
+    np.testing.assert_array_equal(np.asarray(pool.materialize(1)[0]), b_before)
+    # live slots are disjoint
+    slots = [p.slot for p in pool.pages.values() if p.slot is not None]
+    assert len(slots) == len(set(slots)) == 4
+    # and the new sequence really landed in the recycled slots
+    assert np.asarray(pool.materialize(2)[0][:, :, :8]).max() == 3.0
+
+
+def test_append_respects_page_boundaries():
+    pool = make_pool(num_pages=4, ps=4, cap=16)
+    k, v = seq_kv(0, 6)
+    assert pool.write_prefill(0, k, v, 6, step=0)
+    assert len(pool.seq_pages[0]) == 2          # ceil(6/4)
+    kv = jnp.ones((L, KVH, HD), jnp.float32)
+    assert pool.append_token(0, kv, 2 * kv, step=1)   # fills slot 6 (page 1)
+    assert pool.append_token(0, kv, 2 * kv, step=2)   # fills slot 7 (page 1)
+    assert len(pool.seq_pages[0]) == 2
+    assert pool.append_token(0, kv, 2 * kv, step=3)   # opens page 2
+    assert len(pool.seq_pages[0]) == 3
+    kmat, vmat, length = pool.materialize(0)
+    assert length == 9
+    np.testing.assert_array_equal(np.asarray(kmat[:, 0, 8]), np.asarray(kv))
+    np.testing.assert_array_equal(np.asarray(vmat[:, 0, 8]), 2 * np.asarray(kv))
+
+
+# ---------------------------------------------------------------------------
+# park -> resume parity with the whole-cache oracle
+# ---------------------------------------------------------------------------
+
+def test_park_resume_bit_identical_to_whole_cache():
+    """Page-granular compress/park at a shared absolute bound reconstructs
+    bit-identically to serve.engine.compress_cache/decompress_cache."""
+    eb = 1e-3
+    S = 16                                       # 4 pages of 4
+    pool = make_pool(num_pages=8, ps=4, cap=16)
+    k, v = seq_kv(7, S)
+    assert pool.write_prefill(0, k, v, S, step=0)
+    for page in pool.pages_of(0):                # park: every page tiers down
+        pool.compress_page(page.page_id)
+    assert pool.n_free_slots() == 8
+    krec, vrec, _ = pool.materialize(0)          # resume via decompress
+
+    kcfg = KVCompressionConfig(enabled=True, eb=eb, eb_mode="abs",
+                               min_leaf_size=1)
+    whole = decompress_cache(compress_cache(
+        {"k": k, "v": v, "length": jnp.full((1,), S, jnp.int32)}, kcfg), kcfg)
+    np.testing.assert_array_equal(np.asarray(krec[:, :, :S]),
+                                  np.asarray(whole["k"]))
+    np.testing.assert_array_equal(np.asarray(vrec[:, :, :S]),
+                                  np.asarray(whole["v"]))
+
+
+def test_pool_accounting():
+    pool = make_pool(num_pages=4, ps=4, cap=16)
+    k, v = seq_kv(3, 16)
+    # smooth data so compression actually wins
+    k = jnp.cumsum(k, axis=2) * 0.01
+    v = jnp.cumsum(v, axis=2) * 0.01
+    assert pool.write_prefill(0, k, v, 16, step=0)
+    raw = pool.raw_bytes_in_use()
+    assert raw == 4 * pool.slot_bytes == pool.used_bytes()
+    for page in pool.pages_of(0):
+        pool.compress_page(page.page_id)
+    assert pool.raw_bytes_in_use() == 0
+    assert 0 < pool.compressed_used_bytes() < raw
+    assert pool.compressed_wire_bytes() >= pool.compressed_used_bytes()
+    assert pool.live_demand_bytes() == raw       # live pages unchanged
+    assert pool.stats.high_water_slots == 4
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention vs the contiguous oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_attention_matches_decode_attention():
+    rng = np.random.default_rng(11)
+    B, H, KVHn, D, S, ps = 3, 8, 2, 16, 64, 16
+    q = jnp.asarray(rng.standard_normal((B, H, D)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVHn, D)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVHn, D)), dtype=jnp.float32)
+    length = jnp.asarray([5, 64, 17], jnp.int32)  # partial / full / page-straddling
+    kp, vp = pages_from_cache(k, v, ps)
+    out = paged_decode_attention(q, kp, vp, length)
+    ref = decode_attention(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = configs.get("glm4-9b", smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, n_new, priorities=None, seed=0):
+    rng = np.random.default_rng(seed)
+    priorities = priorities or [0] * len(lens)
+    return [Request(req_id=i,
+                    tokens=rng.integers(0, cfg.vocab, (s,), dtype=np.int32),
+                    n_new=n_new, priority=p)
+            for i, (s, p) in enumerate(zip(lens, priorities))]
+
+
+def test_scheduler_preempts_lowest_priority(tiny_engine):
+    cfg, model, params = tiny_engine
+    pool_cfg = PoolConfig(num_pages=2, page_size=8, seq_capacity=32,
+                          cold_after=100, eb=1e-4)  # no routine cooling
+    eng = Engine(model, params, pool=pool_cfg)
+    pool = eng.make_pool()
+    batcher = ContinuousBatcher(eng, pool, max_batch=2)
+    # page-aligned prompts: both lanes open a fresh page on the first decode
+    # step; only preemption (compress-park) can free a slot
+    reqs = _requests(cfg, [8, 8], n_new=6, priorities=[3, 1])
+    from repro.serve.kvpool.scheduler import PARKED, RUNNING, SeqRecord
+    batcher.recs = {r.req_id: SeqRecord(req=r) for r in reqs}
+    outputs = {}
+    batcher.step(1, outputs)
+    assert batcher.stats.preemptions >= 1
+    assert batcher.recs[1].state == PARKED      # the low-priority one
+    assert batcher.recs[0].state == RUNNING
+    # parked pages are compressed, not dropped
+    assert all(p.comp is not None for p in pool.pages_of(1))
+
+
+def test_full_trace_mixed_lengths_matches_oracle(tiny_engine):
+    cfg, model, params = tiny_engine
+    pool_cfg = PoolConfig(num_pages=6, page_size=8, seq_capacity=48,
+                          cold_after=2, eb=1e-4)
+    eng = Engine(model, params, pool=pool_cfg)
+    reqs = _requests(cfg, [5, 11, 8, 16, 3], n_new=5, priorities=[0, 1, 0, 2, 1])
+    outputs, stats, pool = eng.serve(reqs, max_batch=2)
+    assert stats.completed == len(reqs)
+    # the pool drains completely
+    assert not pool.pages and pool.n_free_slots() == pool_cfg.num_pages
+    # prompts are padded to page buckets: [5,11,8,16,3] -> shapes {8, 16}
+    if hasattr(eng._prefill, "_cache_size"):
+        assert eng._prefill._cache_size() <= 2
+    agree = []
+    for r in reqs:
+        oracle, _ = eng.generate({"tokens": jnp.asarray(r.tokens)[None]}, r.n_new)
+        assert outputs[r.req_id].shape == (r.n_new,)
+        agree.append(float((np.asarray(oracle[0]) == outputs[r.req_id]).mean()))
+    assert float(np.mean(agree)) >= 0.9, agree
+
+
+def test_paging_without_compression_is_exact(tiny_engine):
+    """Pure bookkeeping (no page ever tiers down) must match the oracle
+    token-for-token — pins gather/append/extract correctness."""
+    cfg, model, params = tiny_engine
+    pool_cfg = PoolConfig(num_pages=16, page_size=8, seq_capacity=48,
+                          cold_after=10**6, eb=1e-4)
+    eng = Engine(model, params, pool=pool_cfg)
+    reqs = _requests(cfg, [7, 12], n_new=6)
+    outputs, stats, _ = eng.serve(reqs, max_batch=2)
+    assert stats.pool_compressions == 0
+    for r in reqs:
+        oracle, _ = eng.generate({"tokens": jnp.asarray(r.tokens)[None]}, r.n_new)
+        np.testing.assert_array_equal(np.asarray(oracle[0]), outputs[r.req_id])
+
+
+def test_prefill_jit_is_cached(tiny_engine):
+    cfg, model, params = tiny_engine
+    eng = Engine(model, params)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    eng.prefill(batch)
+    if hasattr(eng._prefill, "_cache_size"):
+        before = eng._prefill._cache_size()
+        eng.prefill(batch)
+        eng.prefill(batch)
+        assert eng._prefill._cache_size() == before
+
+
+def test_overlong_request_rejected_up_front(tiny_engine):
+    cfg, model, params = tiny_engine
+    eng = Engine(model, params,
+                 pool=PoolConfig(num_pages=4, page_size=8, seq_capacity=16,
+                                 eb=1e-4))
+    reqs = _requests(cfg, [12], n_new=8)      # 12 + 8 - 1 > 16
+    with pytest.raises(ValueError, match="seq_capacity"):
+        eng.serve(reqs, max_batch=1)
+
+
+def test_victim_selection():
+    # lowest priority first; ties break toward the latest arrival
+    running = {10: (2, 1), 11: (0, 3), 12: (0, 5), 13: (5, 0)}
+    assert TieredPolicy.victim(running) == 12
+    assert TieredPolicy.victim({}) is None
