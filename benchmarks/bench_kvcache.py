@@ -3,17 +3,26 @@
 Cited from serve/engine.py. Three measurements:
 
   * memory ratio of a parked cache across the paper's relative error bounds
-    (whole-cache path, ``used_bytes`` accounting);
+    (whole-cache path, ``used_bytes`` accounting). Ratios are charged against
+    the slab dtype: containers record the source dtype (a bfloat16 cache
+    reports n*2 raw bytes), so the printed ratio and the containers' own
+    ``compression_ratio()`` agree instead of the latter inflating ~2x;
   * park/resume latency — the cost FZ must beat for compress-park preemption
     to outrun drop-and-recompute;
   * decode-logit deviation: max |logit delta| of one decode step running on a
     reconstructed cache vs the raw cache;
+  * decode latency: one scheduler decode step through (a) the contiguous
+    gather + reference model decode, (b) the page-native jnp partials path,
+    (c) the page-native Pallas flash-decode kernel (interpret mode off-TPU,
+    so (c) measures dispatch shape, not TPU speed);
 
 plus one paged-pool row: a continuous-batching trace over a slab smaller than
 its raw demand, reporting the memory high-water mark vs demand and the
 preempt/resume traffic (serve/kvpool).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +53,11 @@ def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2):
         kcfg = KVCompressionConfig(enabled=True, eb=eb, min_leaf_size=1024)
         parked = compress_cache(cache, kcfg)
         packed = compressed_cache_bytes(parked)
+        # container-level sanity: per-leaf ratios are charged against the
+        # leaf's own dtype (bf16 cache => n*2 raw), matching raw/packed
+        for _, (codec, payload, _, dtype) in parked.items():
+            if codec == "fz":
+                assert payload.raw_bytes() == payload.n * jnp.dtype(dtype).itemsize
 
         def park():
             c = compress_cache(cache, kcfg)
@@ -59,6 +73,50 @@ def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2):
         dev = float(jnp.max(jnp.abs(logits_rec - base_logits)))
         rows.append((f"kv-park[eb={eb:g}]", raw / packed,
                      t_park * 1e3, t_resume * 1e3, dev))
+    return rows
+
+
+def decode_latency(arch="glm4-9b", n_seqs=2, prompt=24):
+    """Per-step decode latency: contiguous reference vs page-native paths.
+
+    Half of each sequence's pages are tiered cold first, so every variant
+    pays the transient batched decompress its gather actually does."""
+    cfg = configs.get(arch, smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    pool_cfg = PoolConfig(num_pages=16, page_size=8, seq_capacity=64,
+                          cold_after=10**9, eb=1e-4)
+    engines = {False: Engine(model, params, pool=pool_cfg),
+               True: Engine(model, params,
+                            pool=dataclasses.replace(pool_cfg, use_kernels=True))}
+    pool = engines[False].make_pool()
+    for seq in range(n_seqs):
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (1, prompt), dtype=np.int32))}
+        _, cache = engines[False].prefill(batch)
+        assert pool.write_prefill(seq, cache["k"], cache["v"], prompt, step=0)
+        pids = [p.page_id for p in pool.pages_of(seq)]
+        pool.compress_pages(pids[: len(pids) // 2])       # cold half
+    lanes = list(range(n_seqs))
+    tokens = jnp.zeros((n_seqs,), jnp.int32)
+
+    def contiguous():
+        logits, _ = engines[False].decode_step(pool.gather(lanes), tokens)
+        return [logits]
+
+    def paged(uk):
+        def run():
+            logits, _ = engines[uk].decode_step_paged(pool.gather_pages(lanes),
+                                                      tokens)
+            return [logits]
+        return run
+
+    rows = []
+    for name, fn in (("decode-contiguous-ref", contiguous),
+                     ("decode-paged-jnp", paged(False)),
+                     ("decode-paged-kernel", paged(True))):
+        rows.append((name, timeit(fn, warmup=1, iters=5) * 1e3))
     return rows
 
 
@@ -86,6 +144,9 @@ def main():
     print("bench,ratio,park_ms,resume_ms,decode_logit_dev")
     for name, ratio, park_ms, resume_ms, dev in parking_sweep():
         print(f"{name},{ratio:.2f}x,{park_ms:.1f},{resume_ms:.1f},{dev:.2e}")
+    print("bench,step_ms")
+    for name, ms in decode_latency():
+        print(f"{name},{ms:.1f}")
     print("bench,high_water_bytes,raw_demand_bytes,traffic")
     for name, hw, demand, traffic in pool_trace():
         print(f"{name},{hw},{demand},{traffic}")

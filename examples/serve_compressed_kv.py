@@ -9,6 +9,10 @@ against the never-parked whole-cache oracle (``Engine.generate``).
     PYTHONPATH=src python examples/serve_compressed_kv.py            # full
     PYTHONPATH=src python examples/serve_compressed_kv.py --smoke    # CI: tiny
                                      # model, 2-page pool, 8-step trace
+    PYTHONPATH=src python examples/serve_compressed_kv.py --smoke --kernels
+                                     # CI kernel-parity smoke: same trace
+                                     # through the Pallas flash-decode kernel
+                                     # (page-native gather) + FZ kernel stages
 """
 import argparse
 import dataclasses
@@ -22,11 +26,11 @@ from repro.models import zoo
 from repro.serve import Engine, PoolConfig, Request
 
 
-def build(smoke: bool):
+def build(smoke: bool, kernels: bool = False):
     if smoke:
         cfg = configs.get("glm4-9b", smoke=True)
         pool = PoolConfig(num_pages=2, page_size=8, seq_capacity=32,
-                          cold_after=1, eb=1e-4)
+                          cold_after=1, eb=1e-4, use_kernels=kernels)
         trace = dict(n_reqs=2, prompt_lens=(8, 8), n_new=8, max_batch=2)
     else:
         cfg = dataclasses.replace(
@@ -36,7 +40,7 @@ def build(smoke: bool):
         # page-aligned prompts make several lanes open a fresh page on the
         # same step, overflowing the 5-slot slab -> compress-park preemption
         pool = PoolConfig(num_pages=5, page_size=16, seq_capacity=128,
-                          cold_after=2, eb=1e-4)
+                          cold_after=2, eb=1e-4, use_kernels=kernels)
         trace = dict(n_reqs=6, prompt_lens=(48, 32, 48, 32, 32, 16),
                      n_new=12, max_batch=3)
     return cfg, pool, trace
@@ -46,11 +50,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny model, 2-page pool, 8-step trace (CI)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="route decode through the Pallas flash-decode kernel "
+                         "(page-native gather) and FZ through the kernel "
+                         "stages — interpret mode off-TPU")
     args = ap.parse_args()
 
-    cfg, pool_cfg, trace = build(args.smoke)
+    cfg, pool_cfg, trace = build(args.smoke, args.kernels)
     model = zoo.build(cfg)
     params = model.init(jax.random.key(0))
+    mode = "pallas-kernel paged decode" if args.kernels else "reference decode"
+    print(f"decode path: {mode}")
     print(f"serving {cfg.arch_id}: {model.param_count() / 1e6:.1f}M params, "
           f"pool {pool_cfg.num_pages} pages x {pool_cfg.page_size} tokens")
 

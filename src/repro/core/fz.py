@@ -119,12 +119,29 @@ def _stages(cfg: FZConfig):
     return ref_quant, ref_shuffle_encode, shuffle.bitunshuffle
 
 
+def _source_dtype_name(data: jax.Array) -> str:
+    """Dtype the container's byte accounting is charged against.
+
+    Captured from the *incoming* array before the pipeline's internal
+    float32 cast, so a bfloat16 KV page reports ``raw_bytes() == n * 2``
+    (not the 2x-inflated float32 figure) and ``compression_ratio()`` is
+    honest. Non-float inputs are charged as the float32 they become.
+    """
+    return str(data.dtype) if jnp.issubdtype(data.dtype, jnp.floating) \
+        else "float32"
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
-    """Error-bounded lossy compression of a 1-3D float array."""
+    """Error-bounded lossy compression of a 1-3D float array.
+
+    The source dtype is recorded in the container (``dtype_name``) for byte
+    accounting; the quantization math itself always runs in float32.
+    """
+    dtype_name = _source_dtype_name(data)
     data = data.astype(jnp.float32)
     eb = resolve_eb(data, cfg)
-    return _compress_core(data, eb, cfg)
+    return _compress_core(data, eb, cfg, dtype_name)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -138,12 +155,14 @@ def compress_with_eb(data: jax.Array, eb_abs: jax.Array, cfg: FZConfig) -> FZCom
     ``eb_abs`` is traced (not baked into ``cfg``), all same-shaped pages share
     a single jit trace.
     """
+    dtype_name = _source_dtype_name(data)
     data = data.astype(jnp.float32)
     eb = jnp.maximum(jnp.asarray(eb_abs, jnp.float32), jnp.float32(1e-30))
-    return _compress_core(data, eb, cfg)
+    return _compress_core(data, eb, cfg, dtype_name)
 
 
-def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig) -> FZCompressed:
+def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig,
+                   dtype_name: str = "float32") -> FZCompressed:
     quantize, shuffle_encode, _ = _stages(cfg)
     codes, oidx, oval, n_over = quantize(
         data, eb, code_mode=cfg.code_mode,
@@ -153,7 +172,7 @@ def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig) -> FZCompresse
     return FZCompressed(bitflags=bitflags, payload=payload, nnz_blocks=nnz,
                         outlier_idx=oidx, outlier_val=oval,
                         n_outliers=jnp.minimum(n_over, oidx.size).astype(jnp.int32),
-                        eb_abs=eb, shape=tuple(data.shape), dtype_name="float32")
+                        eb_abs=eb, shape=tuple(data.shape), dtype_name=dtype_name)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -17,6 +17,8 @@ that idea inside the training/serving stack, one module per use case:
     KV shard produces flash-decoding partials that are renormalized across
     the sharding axis, so a parked-and-resharded cache (§2.4 "in-memory
     compression", serve/engine.py) never has to be regathered on one device.
+    The jnp partials are the oracle; ``use_kernels`` swaps in the Pallas
+    KV-tile kernel (``repro.kernels.flash_decode``) per shard.
   * ``compat`` — version-portability shims for the mesh / shard_map APIs so
     the same code runs on the pinned jax as well as current releases.
 """

@@ -9,8 +9,11 @@ partials are renormalized to the global max and combined with psum over the
 sharding axis. Matches models/attention.decode_attention to float32
 round-off (pinned at 2e-4 in tests/test_dist.py).
 
-This is the jnp reference; the Pallas block-parallel kernel is a ROADMAP
-open item and must keep this function as its oracle.
+This is the jnp reference. The Pallas block-parallel kernel
+(``repro.kernels.flash_decode``) computes the same partials tile-by-tile with
+the cross-tile combine fused on-chip; ``flash_decode_shard(use_kernels=True)``
+routes through it inside shard_map, keeping this module as its oracle
+(parity pinned at 2e-4 in tests/test_dist.py and tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -33,8 +36,11 @@ def decode_partials(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     cache slot. Returns ``(m_local, num, den)`` with shapes
     (B, KVH, G), (B, KVH, G, D), (B, KVH, G) — the running max, weighted-value
     numerator and exp-sum denominator of the online softmax, renormalizable
-    against any global max (an entirely-masked slice yields m_local == NEG_INF
-    and zero num/den, so its renorm weight is exactly 0).
+    against any global max. An entirely-masked slice yields m_local == NEG_INF
+    and zero num/den: against a *finite* global max its renorm weight
+    ``exp(NEG_INF - m_global)`` underflows to exactly 0, and when every slice
+    is empty the weight is ``exp(NEG_INF - NEG_INF) == 1`` — the combined
+    output is still 0, but only because num and den are both 0.
 
     Shared by the sequence-sharded path below (combine = pmax/psum over a mesh
     axis) and by serve/kvpool's paged decode attention (combine = max/sum over
@@ -59,20 +65,31 @@ def decode_partials(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 def flash_decode_shard(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                        length: jax.Array, *, axis: str,
-                       shard_offset: jax.Array | int) -> jax.Array:
+                       shard_offset: jax.Array | int,
+                       use_kernels: bool = False) -> jax.Array:
     """One shard of sequence-sharded decode attention; call inside shard_map.
 
     q: (B, H, D) replicated; k_cache/v_cache: (B, S_shard, KVH, D) — the
     local slice of the sequence axis; length: (B,) global valid prefix;
     ``shard_offset``: global position of this shard's first cache slot
     (e.g. ``lax.axis_index(axis) * S_shard``). Returns (B, H, D) replicated
-    over ``axis``.
+    over ``axis``. With ``use_kernels`` the per-shard partials run through the
+    Pallas KV-tile kernel (kernels/flash_decode, interpret mode off-TPU); the
+    cross-shard pmax/psum combine is identical either way.
     """
     B, H, D = q.shape
-    m_local, num, den = decode_partials(q, k_cache, v_cache, length,
-                                        shard_offset=shard_offset)
+    if use_kernels:
+        from repro.kernels import flash_decode as _fdk  # local: mirror fz._stages
+        m_local, num, den = _fdk.decode_partials(q, k_cache, v_cache, length,
+                                                 shard_offset=shard_offset)
+    else:
+        m_local, num, den = decode_partials(q, k_cache, v_cache, length,
+                                            shard_offset=shard_offset)
     m_global = jax.lax.pmax(m_local, axis)
-    corr = jnp.exp(m_local - m_global)                           # 0 for empty shards
+    # weight underflows to 0 for an empty shard when any shard is non-empty;
+    # if ALL shards are empty corr == exp(0) == 1 and the output is 0 anyway
+    # because num and den are both 0 (see decode_partials)
+    corr = jnp.exp(m_local - m_global)
     num = jax.lax.psum(num * corr[..., None], axis)
     den = jax.lax.psum(den * corr, axis)
     out = num / jnp.maximum(den, 1e-30)[..., None]

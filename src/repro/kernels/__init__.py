@@ -3,6 +3,8 @@
 kernel modules (pl.pallas_call + BlockSpec VMEM tiling):
     lorenzo_quant    -- fused pre-quantization + Lorenzo + sign-mag codes
     bitshuffle_flag  -- fused bitshuffle + zero-block flags (paper's fusion)
+    flash_decode     -- block-parallel KV-tile decode attention (contiguous
+                        + paged layouts; serving hot path)
 ops.py -- jit wrappers (interpret-mode fallback off-TPU); ref.py -- oracles.
 """
-from . import bitshuffle_flag, lorenzo_quant, ops, ref  # noqa: F401
+from . import bitshuffle_flag, flash_decode, lorenzo_quant, ops, ref  # noqa: F401

@@ -242,3 +242,46 @@ def forward_decode(params: dict, cfg: ArchConfig, cache: dict, token: jax.Array,
     x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = nn.dense(x, params["unembed"])
     return logits, {"k": ks, "v": vs, "length": length + 1}
+
+
+def forward_decode_paged(params: dict, cfg: ArchConfig, pages: dict,
+                         token: jax.Array, *, use_kernels: bool = False):
+    """One decode step over a page-native KV view (serve/kvpool layout).
+
+    pages: ``{"k": (L, B, P, ps, KVH, hd), "v": ..., "length": (B,)}`` as
+    emitted by ``PagePool.gather_pages`` — attention runs per page via the
+    flash-decoding partials (Pallas KV-tile kernel when ``use_kernels``),
+    never materializing the contiguous ``seq_capacity``-wide cache. This
+    step's K/V is folded into the softmax analytically (it sits at position
+    ``length``, past every page) and returned to the caller for the pool
+    append instead of being scattered into the gathered view.
+
+    token: (B,) int32. Returns ``(logits, (k_new, v_new))`` with k_new/v_new
+    (L, B, KVH, hd).
+    """
+    # runtime import: serve.kvpool imports the model zoo at package-import
+    # time, so a module-level import here would be circular
+    from repro.serve.kvpool import attention as paged_attn
+
+    B = token.shape[0]
+    x = nn.embed_lookup(token, params["embed"])  # (B, d)
+    length = pages["length"]
+    pos = length[:, None]  # (B, 1); mrope families are rejected by make_pool
+
+    def body(x, per_layer):
+        lp, kp, vp = per_layer          # kp/vp: (B, P, ps, KVH, hd)
+        h = nn.rms_norm(x[:, None], lp["attn_norm"], cfg.norm_eps)  # (B,1,d)
+        q, k, v = _qkv(lp, h, cfg, pos)
+        o = paged_attn.paged_decode_attention(
+            q[:, 0], kp, vp, length, k_new=k[:, 0], v_new=v[:, 0],
+            use_kernels=use_kernels)
+        x = x + nn.dense(o.reshape(B, -1), lp["wo"])
+        h = nn.rms_norm(x[:, None], lp["mlp_norm"], cfg.norm_eps)
+        f, _ = _ffn(lp, h, cfg)
+        return x + f[:, 0], (k[:, 0], v[:, 0])
+
+    x, (k_new, v_new) = jax.lax.scan(body, x,
+                                     (params["layers"], pages["k"], pages["v"]))
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    return logits, (k_new, v_new)

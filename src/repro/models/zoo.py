@@ -35,6 +35,9 @@ class Model:
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
     make_cache: Callable[..., dict]
+    # page-native decode over the serve/kvpool layout (transformer families
+    # with plain k/v/length caches only; None elsewhere)
+    decode_paged: Callable[..., Any] | None = None
 
     def init(self, key: jax.Array) -> dict:
         return nn.init_tree(self.defs(), key)
@@ -149,6 +152,12 @@ def build(cfg: ArchConfig) -> Model:
     else:
         raise ValueError(f"unknown family {fam!r}")
 
+    decode_paged = None
+    if fam in ("dense", "moe") or (fam == "vlm" and cfg.mrope_sections is None):
+        decode_paged = (lambda params, pages, token, use_kernels=False:
+                        transformer.forward_decode_paged(
+                            params, cfg, pages, token, use_kernels=use_kernels))
+
     return Model(
         cfg=cfg,
         defs=defs,
@@ -157,4 +166,5 @@ def build(cfg: ArchConfig) -> Model:
         decode=lambda params, cache, token, positions=None:
             mod.forward_decode(params, cfg, cache, token, positions),
         make_cache=make_cache,
+        decode_paged=decode_paged,
     )

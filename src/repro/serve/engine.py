@@ -13,7 +13,9 @@ latency, which cuSZ-class compressors cannot do):
     are FZ-compressed in place, preemption is compress-park, and a
     continuous-batching scheduler drives admit/step/preempt/resume. Decode
     gathers a sequence's pages into the fixed-width cache and runs the
-    model's decode step on it.
+    model's decode step on it — or, with ``PoolConfig.use_kernels``, keeps
+    the page layout and runs the Pallas flash-decode kernel end-to-end
+    (``decode_step_paged`` over ``PagePool.gather_pages``).
 
 Measured in benchmarks/bench_kvcache.py: memory ratio, park/resume latency,
 and the logit deviation of decode steps running on a reconstructed cache.
@@ -46,13 +48,17 @@ class KVCompressionConfig:
 
 
 def compress_cache(cache: dict, kcfg: KVCompressionConfig) -> dict:
-    """Compress the float KV leaves (k/v/xk/xv/wkv/ssm); bookkeeping stays raw."""
+    """Compress the float KV leaves (k/v/xk/xv/wkv/ssm); bookkeeping stays raw.
+
+    Leaves keep their own dtype on the way in: ``fz.compress`` casts to
+    float32 internally but records the source dtype, so a bfloat16 cache's
+    containers report bfloat16 ``raw_bytes`` (honest compression ratios)."""
     fzc = kcfg.fz_config()
     out = {}
     for name, leaf in cache.items():
         if (hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
                 and leaf.size >= kcfg.min_leaf_size):
-            flat = leaf.astype(jnp.float32).reshape(-1)
+            flat = leaf.reshape(-1)
             out[name] = ("fz", fz.compress(flat, fzc), leaf.shape, str(leaf.dtype))
         else:
             out[name] = ("raw", leaf, None, None)
@@ -94,10 +100,23 @@ class Engine:
         self.params = params
         self.kcfg = kv_compress or KVCompressionConfig()
         self.pool_cfg = pool
-        # both step functions are jitted once here; re-wrapping per call
+        # all step functions are jitted once here; re-wrapping per call
         # (the old prefill bug) would retrace on every request
         self._decode = jax.jit(lambda p, c, t: model.decode(p, c, t))
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b))
+        self._decode_paged = None
+        if pool is not None and model.decode_paged is not None:
+            uk = pool.use_kernels          # static: one trace per knob value
+            self._decode_paged = jax.jit(
+                lambda p, pages, t: model.decode_paged(p, pages, t,
+                                                       use_kernels=uk))
+
+    @property
+    def paged_decode_enabled(self) -> bool:
+        """True when ``serve`` should decode page-natively through the Pallas
+        flash-decode kernel (PoolConfig.use_kernels mirrors FZConfig: it
+        routes both the FZ hot stages and decode attention)."""
+        return self._decode_paged is not None and self.pool_cfg.use_kernels
 
     def prefill(self, batch: dict):
         logits, cache = self._prefill(self.params, batch)
@@ -106,6 +125,17 @@ class Engine:
     def decode_step(self, cache: dict, tokens: jax.Array):
         """One decode step on an explicit cache (the pool's gathered view)."""
         return self._decode(self.params, cache, tokens)
+
+    def decode_step_paged(self, pages: dict, tokens: jax.Array):
+        """One decode step on the page-native view (``PagePool.gather_pages``).
+
+        Returns ``(logits, (k_new, v_new))`` — the step's K/V (L, B, KVH, hd)
+        comes back to the caller for the pool append; it was already folded
+        into the softmax analytically, so nothing is scattered into the
+        gathered pages."""
+        if self._decode_paged is None:
+            raise ValueError("model/pool combination has no paged decode")
+        return self._decode_paged(self.params, pages, tokens)
 
     # -- whole-cache parking (parity oracle for the pool) ----------------------
 

@@ -15,7 +15,10 @@ Modules:
   * ``scheduler`` — :class:`ContinuousBatcher`: admit / step / preempt /
                     resume over a request trace;
   * ``attention`` — page-native decode attention built on the same
-                    flash-decoding partials as ``dist.flash_decode``.
+                    flash-decoding partials as ``dist.flash_decode``; with
+                    ``use_kernels`` it runs the Pallas KV-tile kernel
+                    (``kernels/flash_decode``) directly over the pool's
+                    page layout (``PagePool.gather_pages``).
 
 The whole-cache park/resume in ``serve.engine`` (compress_cache /
 decompress_cache) is retained as the parity oracle: at a shared absolute

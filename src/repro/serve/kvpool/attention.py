@@ -4,15 +4,30 @@ Reuses ``repro.dist.flash_decode.decode_partials`` — the same per-slice
 (running max, exp-sum denominator, weighted-value numerator) math that the
 sequence-sharded serving path combines with pmax/psum across a mesh axis —
 but combines over the *page* axis on one device. Pages past a sequence's
-valid length contribute exactly zero (their local max is the finite NEG_INF
-stand-in, so the renormalization weight underflows to 0), which is what lets
-the pool gather fixed-width page lists with zero padding.
+valid length contribute exactly zero: whenever any page is non-empty the
+empty page's renormalization weight ``exp(NEG_INF - m_global)`` underflows
+to 0, and when *every* page is empty (a length-0 lane) the weight is
+``exp(0) == 1`` but the output is still 0 because num and den are both 0.
+That is what lets the pool gather fixed-width page lists with zero padding.
+
+Two execution paths, selected by ``use_kernels`` (mirroring ``FZConfig``):
+
+  * jnp reference — vmap of ``decode_partials`` over the page axis, then a
+    max/sum combine; the oracle;
+  * Pallas KV-tile kernel (``kernels/flash_decode.decode_partials_pages``) —
+    consumes the pool's (B, P, ps, KVH, hd) page layout directly, one page
+    per grid step, online-softmax combine fused on-chip (interpret mode on
+    CPU, Mosaic on TPU).
+
+``k_new``/``v_new`` (each (B, KVH, D)) fold one just-computed decode token
+into the softmax without it ever touching the paged cache — the page-native
+engine decode path appends it to the pool *after* attention, so gather never
+has to materialize the contiguous ``seq_capacity``-wide cache.
 
 ``models.attention.decode_attention`` over the contiguous gathered cache is
-the oracle; parity is pinned in tests/test_kvpool.py. The engine's decode
-path runs the model's own (contiguous) attention on the gathered cache — this
-module is the page-native formulation that a future Pallas paged-attention
-kernel must match.
+the oracle for non-empty lanes; parity for both paths is pinned in
+tests/test_kvpool.py (length-0 lanes return 0 here, while the oracle's
+unmasked softmax degenerates to a mean — pinned explicitly).
 """
 from __future__ import annotations
 
@@ -22,25 +37,48 @@ import jax.numpy as jnp
 from repro.dist import flash_decode
 
 
+def _combine(m_a, num_a, den_a, m_b, num_b, den_b):
+    """Merge two online-softmax partial triples (same shapes, elementwise)."""
+    m = jnp.maximum(m_a, m_b)
+    ca, cb = jnp.exp(m_a - m), jnp.exp(m_b - m)
+    return m, num_a * ca[..., None] + num_b * cb[..., None], den_a * ca + den_b * cb
+
+
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                           length: jax.Array) -> jax.Array:
+                           length: jax.Array, *,
+                           k_new: jax.Array | None = None,
+                           v_new: jax.Array | None = None,
+                           use_kernels: bool = False) -> jax.Array:
     """q: (B, H, D); k_pages/v_pages: (B, P, ps, KVH, D); length: (B,) global
-    valid prefix over the concatenated pages. Returns (B, H, D) in q.dtype."""
+    valid prefix over the concatenated pages. Optional ``k_new``/``v_new``
+    (B, KVH, D) are this step's token at position ``length`` (always valid).
+    Returns (B, H, D) in q.dtype."""
     B, P, ps, KVH, D = k_pages.shape
-    offsets = jnp.arange(P, dtype=jnp.int32) * ps
-
-    def per_page(kp, vp, off):       # kp/vp: (B, ps, KVH, D)
-        return flash_decode.decode_partials(q, kp, vp, length,
-                                            shard_offset=off)
-
-    m, num, den = jax.vmap(per_page, in_axes=(1, 1, 0))(k_pages, v_pages,
-                                                        offsets)
-    m_global = jnp.max(m, axis=0)                       # (B, KVH, G)
-    corr = jnp.exp(m - m_global)                        # 0 for empty pages
-    num = jnp.sum(num * corr[..., None], axis=0)
-    den = jnp.sum(den * corr, axis=0)
-    out = num / jnp.maximum(den, 1e-30)[..., None]
     H = q.shape[1]
+    G = H // KVH
+    if use_kernels:
+        from repro.kernels import flash_decode as _fdk  # local: mirror fz._stages
+        m, num, den = _fdk.decode_partials_pages(q, k_pages, v_pages, length)
+    else:
+        offsets = jnp.arange(P, dtype=jnp.int32) * ps
+
+        def per_page(kp, vp, off):       # kp/vp: (B, ps, KVH, D)
+            return flash_decode.decode_partials(q, kp, vp, length,
+                                                shard_offset=off)
+
+        ms, nums, dens = jax.vmap(per_page, in_axes=(1, 1, 0))(k_pages, v_pages,
+                                                               offsets)
+        m = jnp.max(ms, axis=0)                     # (B, KVH, G)
+        corr = jnp.exp(ms - m)                      # 0 for empty pages (if any
+        num = jnp.sum(nums * corr[..., None], axis=0)   # page is non-empty)
+        den = jnp.sum(dens * corr, axis=0)
+    if k_new is not None:
+        qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * D ** -0.5
+        m_t = jnp.einsum("bhgd,bhd->bhg", qf, k_new.astype(jnp.float32))
+        num_t = jnp.broadcast_to(v_new.astype(jnp.float32)[:, :, None, :],
+                                 (B, KVH, G, D))
+        m, num, den = _combine(m, num, den, m_t, num_t, jnp.ones_like(m_t))
+    out = num / jnp.maximum(den, 1e-30)[..., None]
     return out.reshape(B, H, D).astype(q.dtype)
 
 

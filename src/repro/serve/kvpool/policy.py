@@ -34,27 +34,29 @@ class TieredPolicy:
     cold_after: int = 4
 
     def tier(self, pool: PagePool, step: int, protect: set[int]) -> int:
-        """Compress pages cold for >= cold_after steps; returns count."""
-        n = 0
-        for page in list(pool.pages.values()):
-            if (page.slot is not None and page.page_id not in protect
-                    and step - page.last_write >= self.cold_after):
-                pool.compress_page(page.page_id)
-                n += 1
-        return n
+        """Compress pages cold for >= cold_after steps; returns count.
+
+        The whole cold set goes down in one batched FZ dispatch
+        (``PagePool.compress_pages``), not one dispatch per page."""
+        cold = [page.page_id for page in pool.pages.values()
+                if (page.slot is not None and page.page_id not in protect
+                    and step - page.last_write >= self.cold_after)]
+        pool.compress_pages(cold)
+        return len(cold)
 
     def reclaim(self, pool: PagePool, n: int, protect: set[int]) -> bool:
-        """Force-free >= n slots by compressing coldest raw pages first."""
-        if pool.n_free_slots() >= n:
+        """Force-free >= n slots by compressing coldest raw pages first.
+
+        Each compression frees exactly one slot, so the shortfall picks how
+        many of the coldest candidates go down — in one batched dispatch."""
+        need = n - pool.n_free_slots()
+        if need <= 0:
             return True
         candidates = sorted(
             (p for p in pool.pages.values()
              if p.slot is not None and p.page_id not in protect),
             key=lambda p: p.last_write)
-        for page in candidates:
-            pool.compress_page(page.page_id)
-            if pool.n_free_slots() >= n:
-                return True
+        pool.compress_pages([p.page_id for p in candidates[:need]])
         return pool.n_free_slots() >= n
 
     @staticmethod
@@ -69,13 +71,12 @@ class TieredPolicy:
 
     @staticmethod
     def park(pool: PagePool, seq: int) -> int:
-        """Compress-park: every raw page of ``seq`` tiers down; returns count."""
-        n = 0
-        for page in pool.pages_of(seq):
-            if page.slot is not None:
-                pool.compress_page(page.page_id)
-                n += 1
-        return n
+        """Compress-park: every raw page of ``seq`` tiers down (one batched
+        dispatch); returns count."""
+        raw = [page.page_id for page in pool.pages_of(seq)
+               if page.slot is not None]
+        pool.compress_pages(raw)
+        return len(raw)
 
     @staticmethod
     def tail_pages(pool: PagePool, seqs: Iterable[int | None]) -> set[int]:

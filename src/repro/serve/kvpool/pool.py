@@ -27,6 +27,19 @@ park -> resume through pages is bit-identical to a whole-cache
 ``serve.engine.compress_cache`` / ``decompress_cache`` roundtrip at the same
 bound (pinned in tests/test_kvpool.py) — and every page shares a single jit
 trace because the bound is traced, not baked into the static config.
+
+Dispatch batching: same-shaped pages tier down / decompress through one
+vmapped FZ dispatch (``compress_pages`` / the batched cold-read inside
+``gather``) instead of one Python-loop dispatch per page; single-page results
+are bit-identical (pinned in tests/test_kvpool.py). Byte accounting is
+charged against the slab dtype: a container built from a bfloat16 page
+reports ``raw_bytes() == n * 2``, so ``compression_ratio()`` and ``PoolStats``
+never inflate by the internal float32 cast.
+
+Reads come in two shapes: ``gather`` materializes the contiguous fixed-width
+(L, B, seq_capacity, KVH, hd) cache for the model's reference decode, and
+``gather_pages`` keeps the (L, B, P, ps, KVH, hd) page layout that the Pallas
+flash-decode kernel (kernels/flash_decode) consumes directly.
 """
 from __future__ import annotations
 
@@ -59,7 +72,11 @@ class PoolConfig:
     cold_after: int = 4            # steps without a write before a page tiers down
     eb: float = 1e-4               # error bound for parked pages
     eb_mode: str = "rel"           # "rel": resolved once from first KV data; "abs"
-    use_kernels: bool = False      # route FZ hot stages through Pallas kernels
+    # route the hot paths through Pallas kernels (mirrors FZConfig): FZ
+    # quant/shuffle stages AND page-native decode attention — the engine's
+    # serve loop then decodes via gather_pages + kernels/flash_decode instead
+    # of materializing the contiguous cache (interpret mode off-TPU)
+    use_kernels: bool = False
     exact_outliers: bool = False   # match serve.KVCompressionConfig default
     dtype: str = "bfloat16"
 
@@ -124,6 +141,20 @@ def _set_token(slots, slot, off, k_vec, v_vec):
     """Write one token's K/V (each (L, KVH, hd)) into a page at ``off``."""
     slots = slots.at[slot, 0, :, off].set(k_vec.astype(slots.dtype))
     return slots.at[slot, 1, :, off].set(v_vec.astype(slots.dtype))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _compress_pages_batch(pages_flat, eb_abs, cfg: fz.FZConfig):
+    """vmap ``compress_with_eb`` over same-shaped pages: one dispatch for the
+    whole cold set. Elementwise math at a shared traced bound — each row is
+    bit-identical to a single-page ``compress_with_eb`` call."""
+    return jax.vmap(lambda d: fz.compress_with_eb(d, eb_abs, cfg))(pages_flat)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decompress_pages_batch(comp: fz.FZCompressed, cfg: fz.FZConfig):
+    """vmap ``decompress`` over a leaf-stacked container batch."""
+    return jax.vmap(lambda c: fz.decompress(c, cfg))(comp)
 
 
 @partial(jax.jit, static_argnames=("ps", "n_pages"))
@@ -244,16 +275,42 @@ class PagePool:
     # -- tiering --------------------------------------------------------------
 
     def compress_page(self, pid: int) -> None:
-        """Raw -> compressed: FZ the page contents, release the slot."""
+        """Raw -> compressed: FZ the page contents, release the slot.
+
+        The slab dtype flows into the container (not the pipeline's internal
+        float32), so ``raw_bytes``/``compression_ratio`` stay honest for
+        bfloat16 slabs."""
         page = self.pages[pid]
         if page.slot is None:
             return
-        flat = self.slots[page.slot].astype(jnp.float32).reshape(-1)
+        flat = self.slots[page.slot].reshape(-1)
         self._ensure_eb(flat)
         page.comp = fz.compress_with_eb(flat, self.eb_abs, self._fzc)
         self.free_slots.append(page.slot)
         page.slot = None
         self.stats.compressions += 1
+
+    def compress_pages(self, pids: list[int]) -> None:
+        """Batched raw -> compressed: one vmapped FZ dispatch for the whole
+        set (ROADMAP "kvpool batched tiering"); bit-identical per page to
+        ``compress_page``. Duplicate, already-compressed and freed pids are
+        skipped."""
+        pids = [pid for pid in dict.fromkeys(pids)
+                if pid in self.pages and self.pages[pid].slot is not None]
+        if len(pids) <= 1:
+            for pid in pids:
+                self.compress_page(pid)
+            return
+        flats = jnp.stack([self.slots[self.pages[pid].slot].reshape(-1)
+                           for pid in pids])
+        self._ensure_eb(flats[0])
+        batch = _compress_pages_batch(flats, self.eb_abs, self._fzc)
+        for i, pid in enumerate(pids):
+            page = self.pages[pid]
+            page.comp = jax.tree.map(lambda leaf, i=i: leaf[i], batch)
+            self.free_slots.append(page.slot)
+            page.slot = None
+            self.stats.compressions += 1
 
     def promote_page(self, pid: int, step: int) -> bool:
         """Compressed -> raw (needed before a write); False if no free slot."""
@@ -270,9 +327,23 @@ class PagePool:
         return True
 
     def _decompress(self, page: Page) -> jax.Array:
-        self.stats.decompressions += 1
-        rec = fz.decompress(page.comp, self._fzc)
-        return rec.reshape(self.page_shape).astype(self.slots.dtype)
+        return self._decompress_many([page])[0]
+
+    def _decompress_many(self, pages: list[Page]) -> list[jax.Array]:
+        """Transient cold reads, one vmapped dispatch for the whole set
+        (single-page results bit-identical to ``fz.decompress``). The
+        reconstruction lands back in the slab dtype the page was built from."""
+        if not pages:
+            return []
+        self.stats.decompressions += len(pages)
+        if len(pages) == 1:
+            rec = fz.decompress(pages[0].comp, self._fzc)[None]
+        else:
+            stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                                   *[p.comp for p in pages])
+            rec = _decompress_pages_batch(stacked, self._fzc)
+        return [rec[i].reshape(self.page_shape).astype(self.slots.dtype)
+                for i in range(len(pages))]
 
     def page_data(self, pid: int) -> jax.Array:
         """Page contents (2, L, ps, KVH, hd); cold pages decompress transiently."""
@@ -340,27 +411,51 @@ class PagePool:
 
     # -- reads ----------------------------------------------------------------
 
-    def gather(self, lane_seqs: list[int | None]):
-        """Assemble the fixed-width decode cache for a set of lanes.
+    def _lane_pages(self, lane_seqs: list[int | None]):
+        """Stack every lane's pages: (B, P, 2, L, ps, KVH, hd) + (B,) lengths.
 
-        Returns ``{"k": (L, B, seq_capacity, KVH, hd), "v": ..., "length": (B,)}``
-        with empty lanes zero-filled at length 0. Cold pages are decompressed
-        transiently — reading never changes a page's tier.
+        Cold pages across ALL lanes decompress in one vmapped dispatch
+        (transiently — reading never changes a page's tier); empty lanes are
+        zero-filled at length 0.
         """
         P = self.cfg.max_pages_per_seq
+        lane_pids = [self.seq_pages.get(seq, []) if seq is not None else []
+                     for seq in lane_seqs]
+        cold = [pid for pids in lane_pids for pid in pids
+                if self.pages[pid].slot is None]
+        cold_data = dict(zip(cold, self._decompress_many(
+            [self.pages[pid] for pid in cold])))
         lanes = []
         lengths = []
-        for seq in lane_seqs:
-            pids = self.seq_pages.get(seq, []) if seq is not None else []
-            tensors = [self.page_data(pid) for pid in pids]
+        for seq, pids in zip(lane_seqs, lane_pids):
+            tensors = [self.slots[self.pages[pid].slot]
+                       if self.pages[pid].slot is not None else cold_data[pid]
+                       for pid in pids]
             tensors += [self._zero_page] * (P - len(tensors))
             lanes.append(jnp.stack(tensors))            # (P, 2, L, ps, KVH, hd)
             lengths.append(self.seq_len.get(seq, 0) if seq is not None else 0)
-        arr = jnp.stack(lanes)                          # (B, P, 2, L, ps, KVH, hd)
-        B, _, _, L, ps, KVH, hd = arr.shape
+        return jnp.stack(lanes), jnp.asarray(lengths, jnp.int32)
+
+    def gather(self, lane_seqs: list[int | None]):
+        """Assemble the fixed-width contiguous decode cache for a set of lanes.
+
+        Returns ``{"k": (L, B, seq_capacity, KVH, hd), "v": ..., "length": (B,)}``
+        with empty lanes zero-filled at length 0. This is the reference-decode
+        view; the kernel path reads ``gather_pages`` and skips the P*ps merge.
+        """
+        arr, lengths = self._lane_pages(lane_seqs)      # (B, P, 2, L, ps, KVH, hd)
+        B, P, _, L, ps, KVH, hd = arr.shape
         kv = arr.transpose(2, 3, 0, 1, 4, 5, 6).reshape(2, L, B, P * ps, KVH, hd)
-        return {"k": kv[0], "v": kv[1],
-                "length": jnp.asarray(lengths, jnp.int32)}
+        return {"k": kv[0], "v": kv[1], "length": lengths}
+
+    def gather_pages(self, lane_seqs: list[int | None]):
+        """Page-native decode view: ``{"k": (L, B, P, ps, KVH, hd), "v": ...,
+        "length": (B,)}`` — exactly the tile layout
+        ``kernels/flash_decode.decode_partials_pages`` consumes, so decode
+        never materializes the contiguous ``seq_capacity``-wide cache."""
+        arr, lengths = self._lane_pages(lane_seqs)      # (B, P, 2, L, ps, KVH, hd)
+        kv = arr.transpose(2, 3, 0, 1, 4, 5, 6)         # (2, L, B, P, ps, KVH, hd)
+        return {"k": kv[0], "v": kv[1], "length": lengths}
 
     def materialize(self, seq: int):
         """One sequence's cache (L, 1, seq_capacity, KVH, hd) k/v + length."""

@@ -70,6 +70,12 @@ def _extract_token(ks, vs, lane, pos):
     return ks[:, lane, pos], vs[:, lane, pos]
 
 
+@jax.jit
+def _lane_kv(k_new, v_new, lane):
+    """One lane's freshly-computed K/V (L, KVH, hd) from the paged decode."""
+    return k_new[:, lane], v_new[:, lane]
+
+
 class ContinuousBatcher:
     """admit / step / preempt / resume over a synthetic request trace."""
 
@@ -80,6 +86,7 @@ class ContinuousBatcher:
         self.max_batch = max_batch
         self.policy = policy or TieredPolicy(cold_after=pool.cfg.cold_after)
         self.max_steps = max_steps
+        self.paged_decode = bool(getattr(engine, "paged_decode_enabled", False))
         self.lanes: list[int | None] = [None] * max_batch
         self.recs: dict[int, SeqRecord] = {}
         self.stats = TraceStats()
@@ -211,19 +218,33 @@ class ContinuousBatcher:
             progress |= self._admit(rec, step, outputs)
         # 4. secure tail capacity (may compress-park under pressure)
         self._secure_tails(step)
-        # 5. decode one token for every running lane
+        # 5. decode one token for every running lane. Two wirings:
+        #    * reference — gather the contiguous fixed-width cache, run the
+        #      model's own decode (writes K/V in place), extract the token;
+        #    * paged kernel (engine.paged_decode_enabled) — keep the page
+        #      layout (gather_pages), run the Pallas flash-decode step, and
+        #      append the returned fresh K/V; nothing is ever scattered into
+        #      a seq_capacity-wide cache.
         active = [(i, seq) for i, seq in enumerate(self.lanes) if seq is not None]
         if active:
-            cache = self.pool.gather(self.lanes)
             tokens = jnp.asarray(
                 [self.recs[s].last_token if s is not None else 0
                  for s in self.lanes], jnp.int32)
-            logits, new_cache = self.engine.decode_step(cache, tokens)
+            if self.paged_decode:
+                pages = self.pool.gather_pages(self.lanes)
+                logits, (k_new, v_new) = self.engine.decode_step_paged(pages,
+                                                                       tokens)
+            else:
+                cache = self.pool.gather(self.lanes)
+                logits, new_cache = self.engine.decode_step(cache, tokens)
             for lane, seq in active:
                 rec = self.recs[seq]
                 pos = self.pool.seq_len[seq]
-                k_vec, v_vec = _extract_token(new_cache["k"], new_cache["v"],
-                                              lane, pos)
+                if self.paged_decode:
+                    k_vec, v_vec = _lane_kv(k_new, v_new, lane)
+                else:
+                    k_vec, v_vec = _extract_token(new_cache["k"], new_cache["v"],
+                                                  lane, pos)
                 if not self.pool.append_token(seq, k_vec, v_vec, step):
                     raise RuntimeError("kvpool invariant: tail write failed "
                                        "after _secure_tails")

@@ -1,0 +1,6 @@
+"""Test-support utilities shipped with the package (no runtime dependents).
+
+``minihypothesis`` is an API-compatible subset of ``hypothesis`` used as a
+seeded-random-search fallback so the property tier runs even in hermetic
+environments where the real wheel cannot be installed (tests/conftest.py).
+"""

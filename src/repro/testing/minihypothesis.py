@@ -1,0 +1,124 @@
+"""Seeded random-search fallback for the ``hypothesis`` API subset we use.
+
+CI installs the real ``hypothesis`` wheel (pyproject ``[test]`` extra) and
+this module is never imported. In hermetic (no-network) environments,
+``tests/conftest.py`` calls :func:`install`, which registers this module
+under ``sys.modules["hypothesis"]`` so ``from hypothesis import given,
+settings, strategies as st`` and ``pytest.importorskip("hypothesis")`` both
+work and the property tier still executes.
+
+This is deliberately NOT hypothesis: no shrinking, no example database, no
+assume/target — just ``max_examples`` draws per test from a deterministic
+per-test seed (stable across runs and processes, independent of test order).
+It keeps the property checkers exercised; the real wheel remains the CI
+source of truth.
+
+Supported: ``given``, ``settings(max_examples=, deadline=)``, and the
+strategies ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+``lists``, ``tuples``, ``just``, ``composite``.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    """A draw rule: ``example(rng)`` produces one value."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def example(self, rng: np.random.Generator):
+        return self._fn(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._fn(rng)))
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    return Strategy(lambda rng: [elements.example(rng)
+                                 for _ in range(int(rng.integers(min_size,
+                                                                 max_size + 1)))])
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def composite(fn):
+    """``@st.composite``: fn(draw, *args) -> value becomes a strategy factory."""
+    def builder(*args, **kwargs):
+        def draw_one(rng):
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+        return Strategy(draw_one)
+    return builder
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._mh_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: Strategy):
+    """Run the test ``max_examples`` times on deterministic seeded draws."""
+    def deco(fn):
+        def wrapper():
+            n = getattr(fn, "_mh_max_examples", 20)
+            base = zlib.adler32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base, i))
+                fn(*[s.example(rng) for s in strategies])
+        # plain attributes only: functools.wraps would set __wrapped__ and
+        # make pytest see the wrapped signature's params as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (idempotent; no-op if the real
+    wheel is importable — callers check that first)."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "just", "composite"):
+        setattr(st_mod, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.__version__ = "0.0.minihypothesis"
+    hyp.IS_MINIHYPOTHESIS = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,0 +1,14 @@
+"""Suite-wide conftest: optional-dependency shims.
+
+The property tier (tests/test_fz_properties.py, tests/test_decode_properties.py)
+prefers the real ``hypothesis`` wheel — CI installs it via the pyproject
+``[test]`` extra. Hermetic environments (no network) fall back to the bundled
+``repro.testing.minihypothesis`` shim: the same API subset driven by seeded
+random search, so the property tests run everywhere instead of silently
+skipping.
+"""
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro.testing import minihypothesis
+    minihypothesis.install()

@@ -48,6 +48,34 @@ def test_logical_table_single_vs_multi_pod():
     assert t2["fsdp"] == ("data",) and t2["dp"] == ("pod", "data")
 
 
+def test_flash_decode_shard_kernel_partials_contract():
+    """Single-process check of the kernel's per-shard contract: partials at a
+    non-zero shard_offset match the jnp reference, including a shard that
+    lies entirely past every sequence's length (all-empty => m == NEG_INF,
+    num == den == 0, so the psum combine contributes nothing)."""
+    import jax.numpy as jnp
+    from repro.dist import flash_decode as fdr
+    from repro.kernels import flash_decode as fdk
+
+    rng = np.random.default_rng(3)
+    B, S_shard, H, KVH, D = 3, 16, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S_shard, KVH, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S_shard, KVH, D)).astype(np.float32))
+    length = jnp.asarray([5, 30, 17], jnp.int32)
+    for offset in (0, 16, 32):        # 32: fully past every length
+        got = fdk.decode_partials(q, k, v, length, shard_offset=offset,
+                                  interpret=True)
+        want = fdr.decode_partials(q, k, v, length, shard_offset=offset)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       atol=2e-4)
+    m, num, den = fdk.decode_partials(q, k, v, length, shard_offset=32,
+                                      interpret=True)
+    assert np.all(np.asarray(m) == fdr.NEG_INF)
+    assert np.all(np.asarray(num) == 0.0) and np.all(np.asarray(den) == 0.0)
+
+
 def test_wire_bytes_accounting():
     from repro.dist.compressed_allreduce import GradCompressionConfig, wire_bytes_per_leaf
     cfg = GradCompressionConfig(capacity_frac=0.5)
@@ -88,6 +116,19 @@ sm = compat.shard_map(body, mesh=mesh,
 out = jax.jit(sm)(q, k, v, length)
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
 print("flash_decode OK")
+
+# ---- 1b) same combine, per-shard partials through the Pallas KV-tile kernel
+def body_k(q, k_sh, v_sh, length):
+    idx = jax.lax.axis_index("model")
+    return flash_decode_shard(q, k_sh, v_sh, length, axis="model",
+                              shard_offset=idx * S_shard, use_kernels=True)
+
+sm_k = compat.shard_map(body_k, mesh=mesh,
+                        in_specs=(P(), P(None, "model"), P(None, "model"), P()),
+                        out_specs=P(), axis_names={"model"})
+out_k = jax.jit(sm_k)(q, k, v, length)
+np.testing.assert_allclose(np.asarray(out_k), np.asarray(ref), rtol=2e-4, atol=2e-4)
+print("flash_decode_kernel OK")
 
 # ---- 2) compressed cross-pod reduce ~= exact mean within error bound
 from repro.dist.compressed_allreduce import (GradCompressionConfig, init_error_state,

@@ -45,11 +45,20 @@ def make_array(seed: int, kind: str, dims) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def check_error_bound_invariant(x: np.ndarray, eb: float) -> None:
-    """|x - D(C(x))|_inf <= eb_abs with exact outliers ON (strict mode)."""
+    """|x - D(C(x))|_inf <= eb_abs with exact outliers ON (strict mode).
+
+    The bound is exact in real arithmetic; the float32 reconstruction
+    ``code * 2eb`` adds up to ~|x|_inf * 2^-22 of rounding noise on top
+    (visible at tight bounds on O(1) data, e.g. eb=1e-5 on |x| ~ 4 — found
+    by the property search once it actually ran), so the tolerance carries
+    an explicit f32-rounding allowance rather than a magic slack factor.
+    """
     cfg = fz.FZConfig(eb=eb, eb_mode="rel", exact_outliers=True, outlier_frac=1.0)
     rec, c = fz.roundtrip(jnp.asarray(x), cfg)
     eb_abs = float(c.eb_abs)
-    assert float(metrics.max_abs_err(jnp.asarray(x), rec)) <= eb_abs * 1.001 + 1e-30
+    f32_round = float(np.max(np.abs(x), initial=0.0)) * 2.0 ** -22
+    assert float(metrics.max_abs_err(jnp.asarray(x), rec)) \
+        <= eb_abs * 1.001 + f32_round + 1e-30
 
 
 def check_compression_ratio_accounting(x: np.ndarray, eb: float) -> None:

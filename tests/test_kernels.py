@@ -82,6 +82,113 @@ def test_fz_kernel_hybrid_strict_mode():
     assert float(metrics.max_abs_err(x, rec)) <= float(c.eb_abs) * (1 + 1e-5)
 
 
+# ---------------------------------------------------------------------------
+# flash-decode kernel vs the dist/flash_decode jnp partials (the oracle)
+# ---------------------------------------------------------------------------
+
+def _decode_case(seed, B=4, S=96, H=8, KVH=4, D=16):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("kv_tile", [16, 32, 64, 128])  # 64: pads 96 -> 128;
+def test_flash_decode_partials_match_jnp_oracle(kv_tile):  # 128 clamps to S=96
+    from repro.dist import flash_decode as fdr
+    from repro.kernels import flash_decode as fdk
+    q, k, v = _decode_case(0)
+    length = jnp.asarray([0, 1, 96, 37], jnp.int32)  # empty / one / full / ragged
+    m_k, num_k, den_k = fdk.decode_partials(q, k, v, length, kv_tile=kv_tile,
+                                            interpret=True)
+    m_r, num_r, den_r = fdr.decode_partials(q, k, v, length, shard_offset=0)
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))  # max is exact
+    np.testing.assert_allclose(np.asarray(num_k), np.asarray(num_r), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(den_k), np.asarray(den_r), atol=2e-4)
+
+
+@pytest.mark.parametrize("offset", [0, 32, 80])      # 80: slice past every length
+def test_flash_decode_shard_offset_matches_oracle(offset):
+    """Offset slices (the shard_map per-shard view) mask identically."""
+    from repro.dist import flash_decode as fdr
+    from repro.kernels import flash_decode as fdk
+    q, k, v = _decode_case(1)
+    length = jnp.asarray([5, 40, 64, 96], jnp.int32)
+    ksl, vsl = k[:, offset:], v[:, offset:]
+    got = fdk.decode_partials(q, ksl, vsl, length, shard_offset=offset,
+                              kv_tile=16, interpret=True)
+    want = fdr.decode_partials(q, ksl, vsl, length, shard_offset=offset)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=2e-4)
+
+
+def test_flash_decode_padded_tile_with_overlong_length():
+    """Regression: tile padding must stay masked even when the global length
+    extends past this slice (a shard whose sequence continues in later
+    shards). With S=96, kv_tile=64 the slice pads to 128; an unclamped
+    ``pos < length`` mask would let the 32 zero-K pad rows into the softmax
+    (each adds exp(-m) to den), skewing den by O(pad)."""
+    from repro.dist import flash_decode as fdr
+    from repro.kernels import flash_decode as fdk
+    q, k, v = _decode_case(7)
+    length = jnp.asarray([200, 96, 97, 5], jnp.int32)   # all >= or > slice end
+    got = fdk.decode_partials(q, k, v, length, shard_offset=0, kv_tile=64,
+                              interpret=True)
+    want = fdr.decode_partials(q, k, v, length, shard_offset=0)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]), atol=2e-4)
+
+
+def test_flash_decode_combined_matches_decode_attention():
+    from repro.kernels import flash_decode as fdk
+    from repro.models.attention import decode_attention
+    q, k, v = _decode_case(2)
+    length = jnp.asarray([1, 17, 96, 50], jnp.int32)
+    out = fdk.flash_decode(q, k, v, length, kv_tile=32, interpret=True)
+    ref = decode_attention(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_flash_decode_paged_layout_matches_contiguous():
+    """Page-native entry == contiguous entry == oracle (same data, two tilings)."""
+    from repro.kernels import flash_decode as fdk
+    from repro.models.attention import decode_attention
+    q, k, v = _decode_case(3)
+    length = jnp.asarray([0, 16, 96, 49], jnp.int32)  # page-aligned + straddling
+    B, S, KVH, D = k.shape
+    ps = 16
+    kp = k.reshape(B, S // ps, ps, KVH, D)
+    vp = v.reshape(B, S // ps, ps, KVH, D)
+    m, num, den = fdk.decode_partials_pages(q, kp, vp, length, interpret=True)
+    out = fdk.combine_partials(m, num, den, dtype=q.dtype)
+    ref = decode_attention(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out[1:]), np.asarray(ref[1:]), atol=2e-4)
+    # length-0 lane: kernel returns exactly 0 (num == den == 0) — the
+    # contiguous oracle's unmasked softmax degenerates to a mean there
+    assert np.all(np.asarray(out[0]) == 0.0)
+
+
+def test_flash_decode_all_lanes_empty_is_zero():
+    """All slices empty: the renorm weight is exp(0) == 1, yet the output is
+    exactly 0 because num and den are both 0 — the contract the combine
+    comments document (dist/flash_decode.py, kvpool/attention.py)."""
+    from repro.dist import flash_decode as fdr
+    from repro.kernels import flash_decode as fdk
+    q, k, v = _decode_case(4, B=2, S=32)
+    length = jnp.zeros((2,), jnp.int32)
+    out = fdk.flash_decode(q, k, v, length, kv_tile=16, interpret=True)
+    assert np.all(np.asarray(out) == 0.0)
+    m, num, den = fdk.decode_partials(q, k, v, length, kv_tile=16, interpret=True)
+    assert np.all(np.asarray(m) == fdk.NEG_INF)
+    assert np.all(np.asarray(num) == 0.0) and np.all(np.asarray(den) == 0.0)
+    # and the jnp reference partials agree exactly on the empty contract
+    m_r, num_r, den_r = fdr.decode_partials(q, k, v, length, shard_offset=0)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(m_r))
+    np.testing.assert_array_equal(np.asarray(num), np.asarray(num_r))
+
+
 def test_ops_shuffle_encode_equals_core_encode():
     from repro.core import encode as enc, shuffle as shf
     codes = jnp.asarray(RNG.integers(0, 1 << 16, size=3 * ref.TILE, dtype=np.uint16))

@@ -20,9 +20,9 @@ from repro.serve.kvpool import (ContinuousBatcher, PagePool, PoolConfig,
 L, KVH, HD = 2, 2, 8     # tiny cache geometry for pool-only tests
 
 
-def make_pool(num_pages=8, ps=4, cap=32, **kw) -> PagePool:
+def make_pool(num_pages=8, ps=4, cap=32, dtype="float32", **kw) -> PagePool:
     cfg = PoolConfig(num_pages=num_pages, page_size=ps, seq_capacity=cap,
-                     eb=1e-3, eb_mode="abs", dtype="float32", **kw)
+                     eb=1e-3, eb_mode="abs", dtype=dtype, **kw)
     return PagePool(cfg, n_layers=L, n_kv_heads=KVH, head_dim=HD)
 
 
@@ -126,6 +126,99 @@ def test_pool_accounting():
 
 
 # ---------------------------------------------------------------------------
+# byte accounting: containers are charged against the slab dtype
+# ---------------------------------------------------------------------------
+
+def test_bf16_page_raw_bytes_honest():
+    """A container built from a bfloat16 slab reports bfloat16 raw bytes —
+    n*2, not the float32-cast n*4 that inflated compression_ratio ~2x."""
+    from repro.core import fz
+    pool = make_pool(num_pages=4, ps=4, cap=16, dtype="bfloat16")
+    k, v = seq_kv(5, 8)
+    assert pool.write_prefill(0, k, v, 8, step=0)
+    for page in pool.pages_of(0):
+        pool.compress_page(page.page_id)
+    for page in pool.pages_of(0):
+        assert int(page.comp.raw_bytes()) == page.comp.n * 2
+    # direct fz roundtrip: source dtype flows through compress / compress_with_eb
+    x16 = jnp.asarray(np.random.default_rng(0).standard_normal(4096),
+                      dtype=jnp.bfloat16)
+    cfg = fz.FZConfig(eb=1e-3, eb_mode="abs", exact_outliers=False)
+    rec, c = fz.roundtrip(x16, cfg)
+    assert int(c.raw_bytes()) == x16.size * 2
+    c2 = fz.compress_with_eb(x16, jnp.float32(1e-3), cfg)
+    assert int(c2.raw_bytes()) == x16.size * 2
+    # float32 sources still report n*4
+    c3 = fz.compress(x16.astype(jnp.float32), cfg)
+    assert int(c3.raw_bytes()) == x16.size * 4
+
+
+def _pool_pair(**kw):
+    pools = []
+    for _ in range(2):
+        pool = make_pool(num_pages=8, ps=4, cap=32, **kw)
+        k, v = seq_kv(9, 16)
+        assert pool.write_prefill(0, k, v, 16, step=0)
+        pools.append(pool)
+    return pools
+
+
+def test_batched_tiering_bit_identical_to_single_page():
+    """compress_pages (one vmapped dispatch) == compress_page per page, bit
+    for bit; ditto the batched cold-read in gather vs one-at-a-time."""
+    one, batch = _pool_pair(dtype="bfloat16")
+    pids_one = [p.page_id for p in one.pages_of(0)]
+    for pid in pids_one:
+        one.compress_page(pid)
+    batch.compress_pages([p.page_id for p in batch.pages_of(0)])
+    assert batch.stats.compressions == len(pids_one)
+    for p1, p2 in zip(one.pages_of(0), batch.pages_of(0)):
+        for l1, l2 in zip(jax.tree.leaves(p1.comp), jax.tree.leaves(p2.comp)):
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        assert p1.comp.shape == p2.comp.shape
+        assert p1.comp.dtype_name == p2.comp.dtype_name
+    # batched transient decompress (4 cold pages in one dispatch) == singles
+    k1 = np.asarray(one.materialize(0)[0])
+    singles = [np.asarray(one._decompress(p)) for p in one.pages_of(0)]
+    many = [np.asarray(t) for t in
+            batch._decompress_many(batch.pages_of(0))]
+    for s, m in zip(singles, many):
+        np.testing.assert_array_equal(s, m)
+    np.testing.assert_array_equal(k1, np.asarray(batch.materialize(0)[0]))
+
+
+def test_compress_pages_dedupes_and_skips():
+    """Duplicate / already-compressed / unknown pids never corrupt the free
+    list or double-count compressions."""
+    pool = make_pool(num_pages=8, ps=4, cap=32)
+    k, v = seq_kv(17, 8)
+    assert pool.write_prefill(0, k, v, 8, step=0)
+    pids = [p.page_id for p in pool.pages_of(0)]
+    pool.compress_pages([pids[0], pids[0], pids[1], 10_000])
+    assert pool.stats.compressions == 2
+    assert None not in pool.free_slots
+    assert pool.n_free_slots() == 8 - len(pids) + 2
+    pool.compress_pages(pids)                     # re-run: both already cold
+    assert pool.stats.compressions == 2
+
+
+def test_gather_pages_is_unmerged_gather():
+    """gather_pages is the same data as gather, minus the P*ps merge."""
+    pool = make_pool(num_pages=8, ps=4, cap=16)
+    k, v = seq_kv(13, 10)
+    assert pool.write_prefill(0, k, v, 10, step=0)
+    pool.compress_page(pool.pages_of(0)[0].page_id)    # one cold page
+    cache = pool.gather([0, None])
+    pages = pool.gather_pages([0, None])
+    L, B, P, ps, KVH, hd = pages["k"].shape
+    np.testing.assert_array_equal(
+        np.asarray(pages["k"].reshape(L, B, P * ps, KVH, hd)),
+        np.asarray(cache["k"]))
+    np.testing.assert_array_equal(np.asarray(pages["length"]),
+                                  np.asarray(cache["length"]))
+
+
+# ---------------------------------------------------------------------------
 # paged decode attention vs the contiguous oracle
 # ---------------------------------------------------------------------------
 
@@ -140,6 +233,61 @@ def test_paged_attention_matches_decode_attention():
     out = paged_decode_attention(q, kp, vp, length)
     ref = decode_attention(q, k, v, length)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_paged_attention_kernel_path_matches_oracle():
+    """use_kernels routes through kernels/flash_decode.decode_partials_pages
+    (interpret mode on CPU); parity with the contiguous oracle at the same
+    2e-4 pin, with and without the folded-in new token."""
+    rng = np.random.default_rng(23)
+    B, H, KVHn, D, S, ps = 3, 8, 2, 16, 64, 16
+    q = jnp.asarray(rng.standard_normal((B, H, D)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVHn, D)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVHn, D)), dtype=jnp.float32)
+    length = jnp.asarray([1, 64, 17], jnp.int32)
+    kp, vp = pages_from_cache(k, v, ps)
+    out_k = paged_decode_attention(q, kp, vp, length, use_kernels=True)
+    ref = decode_attention(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(ref), atol=2e-4)
+
+    # new-token fold-in: token K/V at position `length` without touching
+    # pages == oracle with the token scattered into the contiguous cache
+    lengths2 = jnp.asarray([0, 40, 17], jnp.int32)   # all < S; incl. empty
+    k_new = jnp.asarray(rng.standard_normal((B, KVHn, D)), dtype=jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal((B, KVHn, D)), dtype=jnp.float32)
+    onehot = (jnp.arange(S)[None, :] == lengths2[:, None])
+    k_ins = jnp.where(onehot[:, :, None, None], k_new[:, None], k)
+    v_ins = jnp.where(onehot[:, :, None, None], v_new[:, None], v)
+    ref_new = decode_attention(q, k_ins, v_ins, lengths2 + 1)
+    for uk in (False, True):
+        out_new = paged_decode_attention(q, kp, vp, lengths2, k_new=k_new,
+                                         v_new=v_new, use_kernels=uk)
+        np.testing.assert_allclose(np.asarray(out_new), np.asarray(ref_new),
+                                   atol=2e-4)
+
+
+def test_paged_attention_all_lanes_empty_returns_zero():
+    """Length-0 lanes (and the all-lanes-empty batch) return exactly 0 on
+    both paths: num == den == 0, even though the renormalization weight is
+    exp(0) == 1 when every page is empty — the corrected combine contract."""
+    rng = np.random.default_rng(29)
+    B, H, KVHn, D, S, ps = 2, 4, 2, 8, 32, 8
+    q = jnp.asarray(rng.standard_normal((B, H, D)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVHn, D)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVHn, D)), dtype=jnp.float32)
+    kp, vp = pages_from_cache(k, v, ps)
+    zero = jnp.zeros((B,), jnp.int32)
+    for uk in (False, True):
+        out = paged_decode_attention(q, kp, vp, zero, use_kernels=uk)
+        assert np.all(np.asarray(out) == 0.0), f"use_kernels={uk}"
+    # mixed batch: lane 0 empty, lane 1 live — lane 0 still exactly 0
+    mixed = jnp.asarray([0, 20], jnp.int32)
+    for uk in (False, True):
+        out = paged_decode_attention(q, kp, vp, mixed, use_kernels=uk)
+        assert np.all(np.asarray(out[0]) == 0.0)
+        ref = decode_attention(q, k, v, mixed)
+        np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref[1]),
+                                   atol=2e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +366,27 @@ def test_paging_without_compression_is_exact(tiny_engine):
     for r in reqs:
         oracle, _ = eng.generate({"tokens": jnp.asarray(r.tokens)[None]}, r.n_new)
         np.testing.assert_array_equal(np.asarray(oracle[0]), outputs[r.req_id])
+
+
+def test_engine_paged_kernel_decode_end_to_end(tiny_engine):
+    """PoolConfig.use_kernels routes the whole serve decode path through the
+    Pallas flash-decode kernel: page-native gather (no contiguous cache),
+    decode_step_paged, pool append of the returned K/V. Tokens track the
+    never-paged oracle."""
+    cfg, model, params = tiny_engine
+    pool_cfg = PoolConfig(num_pages=16, page_size=8, seq_capacity=48,
+                          cold_after=2, eb=1e-4, use_kernels=True)
+    eng = Engine(model, params, pool=pool_cfg)
+    assert eng.paged_decode_enabled
+    reqs = _requests(cfg, [7, 12], n_new=5)
+    outputs, stats, pool = eng.serve(reqs, max_batch=2)
+    assert stats.completed == len(reqs)
+    agree = []
+    for r in reqs:
+        oracle, _ = eng.generate({"tokens": jnp.asarray(r.tokens)[None]}, r.n_new)
+        assert outputs[r.req_id].shape == (r.n_new,)
+        agree.append(float((np.asarray(oracle[0]) == outputs[r.req_id]).mean()))
+    assert float(np.mean(agree)) >= 0.9, agree
 
 
 def test_prefill_jit_is_cached(tiny_engine):
