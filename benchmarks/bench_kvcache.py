@@ -36,7 +36,7 @@ from repro.serve.engine import (cache_bytes, compress_cache,
                                 compressed_cache_bytes, decompress_cache)
 
 
-def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2):
+def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2, ebs=PAPER_EBS):
     cfg = configs.get(arch, smoke=True)
     model = zoo.build(cfg)
     params = model.init(jax.random.key(0))
@@ -49,7 +49,7 @@ def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2):
     base_logits, _ = eng.decode_step(cache, tok)
 
     rows = []
-    for eb in PAPER_EBS:
+    for eb in ebs:
         kcfg = KVCompressionConfig(enabled=True, eb=eb, min_leaf_size=1024)
         parked = compress_cache(cache, kcfg)
         packed = compressed_cache_bytes(parked)
@@ -140,16 +140,30 @@ def pool_trace(arch="glm4-9b"):
              f"{stats.tiered_pages}tiered")]
 
 
-def main():
+def main(smoke: bool = False) -> dict:
+    """Prints the tables; returns machine-readable rows (BENCH_ci.json).
+
+    ``smoke``: one error bound and a smaller prefill for the parking sweep —
+    the CI preset keeps every section (park, decode latency, pool trace)
+    live while staying minutes-cheap on the runner.
+    """
+    park_kw = dict(S=64, B=1, n_tokens=1, ebs=(1e-3,)) if smoke else {}
+    out = {"parking": [], "decode_ms": [], "pool": []}
     print("bench,ratio,park_ms,resume_ms,decode_logit_dev")
-    for name, ratio, park_ms, resume_ms, dev in parking_sweep():
+    for name, ratio, park_ms, resume_ms, dev in parking_sweep(**park_kw):
         print(f"{name},{ratio:.2f}x,{park_ms:.1f},{resume_ms:.1f},{dev:.2e}")
+        out["parking"].append({"name": name, "ratio": ratio, "park_ms": park_ms,
+                               "resume_ms": resume_ms, "logit_dev": dev})
     print("bench,step_ms")
-    for name, ms in decode_latency():
+    for name, ms in decode_latency(**(dict(n_seqs=1, prompt=16) if smoke else {})):
         print(f"{name},{ms:.1f}")
+        out["decode_ms"].append({"name": name, "step_ms": ms})
     print("bench,high_water_bytes,raw_demand_bytes,traffic")
     for name, hw, demand, traffic in pool_trace():
         print(f"{name},{hw},{demand},{traffic}")
+        out["pool"].append({"name": name, "high_water_bytes": int(hw),
+                            "raw_demand_bytes": int(demand), "traffic": traffic})
+    return out
 
 
 if __name__ == "__main__":

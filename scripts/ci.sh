@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI entry point: `scripts/ci.sh fast|slow|all` (default fast).
+# CI entry point: `scripts/ci.sh fast|slow|bench|all` (default fast).
 #
 # XLA flags are pinned so the fake-device tests are deterministic: the main
 # pytest process keeps a single CPU device (tests/test_dist.py spawns its own
@@ -29,6 +29,24 @@ case "$tier" in
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke --kernels
     ;;
   slow) exec python -m pytest -q -m slow ;;
+  bench)
+    # perf-trajectory smoke: tiny-shape kvcache decode + the barrier-vs-
+    # bucketed overlap sweep, one machine-readable BENCH_ci.json at the repo
+    # root (the workflow uploads it as an artifact — every CI run appends a
+    # datapoint to the trajectory instead of leaving BENCH_* empty)
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+        --only kvcache,overlap --smoke --json-out BENCH_ci.json
+    python - <<'PY'
+import json
+doc = json.load(open("BENCH_ci.json"))
+rows = doc["sections"]["overlap"]["rows"]
+modes = {r["mode"] for r in rows}
+assert {"barrier", "bucketed"} <= modes, f"missing reduce modes: {modes}"
+assert doc["sections"]["kvcache"]["decode_ms"], "kvcache decode rows missing"
+print(f"BENCH_ci.json OK: sections={sorted(doc['sections'])}, "
+      f"{len(rows)} overlap rows")
+PY
+    ;;
   all)  exec python -m pytest -q ;;
-  *)    echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;
+  *)    echo "usage: $0 [fast|slow|bench|all]" >&2; exit 2 ;;
 esac

@@ -12,7 +12,14 @@ that idea inside the training/serving stack, one module per use case:
   * ``compressed_allreduce`` — §2.4 "wire compression": the cross-pod
     gradient mean crosses the slow inter-pod link as capacity-sized FZ
     containers instead of raw f32, with error feedback carrying the lossy
-    residual into the next step (train/step.py pod-compress path).
+    residual into the next step (train/step.py pod-compress path). This is
+    the end-of-step barrier form, retained as the bit-parity oracle.
+  * ``bucketed_reduce`` — the same reduce restructured for overlap: leaves
+    packed into deterministic size-targeted buckets, one compress ->
+    all_gather("pod") -> decompress-mean hop per bucket issued in backward
+    production order, plus the ``grad_boundary`` custom_vjp taps that pin
+    parameter-group cotangents as schedulable units (train/step.py overlap
+    path, ``launch/train.py --overlap-reduce``).
   * ``flash_decode`` — sequence-sharded decode attention for serving: each
     KV shard produces flash-decoding partials that are renormalized across
     the sharding axis, so a parked-and-resharded cache (§2.4 "in-memory
@@ -22,4 +29,5 @@ that idea inside the training/serving stack, one module per use case:
   * ``compat`` — version-portability shims for the mesh / shard_map APIs so
     the same code runs on the pinned jax as well as current releases.
 """
-from . import compat, compressed_allreduce, flash_decode, sharding  # noqa: F401
+from . import (bucketed_reduce, compat, compressed_allreduce,  # noqa: F401
+               flash_decode, sharding)

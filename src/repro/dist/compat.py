@@ -27,6 +27,32 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
     return jax.make_mesh(axis_shapes, axis_names)
 
 
+_OB_BATCHING_DONE = False
+
+
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` that also works under ``vmap``.
+
+    jax 0.4.x ships the primitive without a batching rule, but the
+    bucketed-reduce grad taps run inside the step builder's vmap over the
+    pod dimension (train/step.py). The barrier is an identity per operand,
+    so the rule is trivial: bind the batched operands, keep the batch dims.
+    Registered once, only if the running jax lacks it.
+    """
+    global _OB_BATCHING_DONE
+    if not _OB_BATCHING_DONE:
+        from jax.interpreters import batching
+        prim = getattr(jax.lax, "optimization_barrier_p", None)
+        if prim is None:
+            from jax._src.lax.lax import optimization_barrier_p as prim
+        if prim not in batching.primitive_batchers:
+            def _identity_batcher(args, dims):
+                return prim.bind(*args), dims
+            batching.primitive_batchers[prim] = _identity_batcher
+        _OB_BATCHING_DONE = True
+    return jax.lax.optimization_barrier(x)
+
+
 def shard_map(f: Callable, *, mesh, in_specs, out_specs, axis_names=None):
     """Manual-collectives map, portable across the shard_map API split.
 

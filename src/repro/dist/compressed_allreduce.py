@@ -13,9 +13,21 @@ compression; verified in tests/test_dist.py).
 
 Execution model: hybrid — the loss/backward stays fully XLA-automatic (the
 step builder vmaps it over a stacked leading pod dimension), and only the
-reduce hop itself runs as a manual shard_map over the ``pod`` axis:
+reduce hops run as manual shard_map regions over the ``pod`` axis:
 compress locally, ``all_gather`` the container leaves over ``pod``,
-decompress all pods on every device, mean. Two reasons it is manual:
+decompress all pods on every device, mean. The reduce comes in two issue
+granularities sharing this per-leaf math bit-for-bit:
+
+  * this module's ``reduce_stacked`` — ONE region per leaf, all issued
+    after the full backward pass (a barrier at the end of the step). It is
+    the parity ORACLE: simple, and bit-identical to the bucketed path.
+  * ``bucketed_reduce.reduce_stacked_bucketed`` — leaves grouped into
+    size-targeted buckets, one region per bucket issued in backward
+    production order, so each bucket's DCN transfer can overlap the
+    remaining backward compute (``train/step.py`` overlap path,
+    ``launch/train.py --overlap-reduce``).
+
+Two reasons the hop is manual:
 (1) the wire format is structural — the only tensors that can cross the
 pod boundary are the capacity-sized container buffers, independent of any
 partitioner choice; (2) the FZ pipeline (integer prefix sums, bit packing,
@@ -54,6 +66,12 @@ class GradCompressionConfig:
     code_mode: str = "sign_mag"
     capacity_frac: float = 1.0     # container payload capacity vs worst case
     min_leaf_size: int = 4096      # elements; smaller leaves reduce exactly
+    # bucketed/overlapped issue (dist/bucketed_reduce.py): when ``overlap``
+    # is on, the step builder routes the reduce through per-bucket hops
+    # (``bucket_bytes`` of wire traffic each) interleaved with the backward
+    # pass; off keeps the legacy single-barrier reduce below.
+    overlap: bool = False
+    bucket_bytes: int = 4 << 20
 
     def fz_config(self) -> fz.FZConfig:
         # exact_outliers off: saturation error (like dropped blocks when
@@ -130,6 +148,32 @@ def _roundtrip_per_pod(x: jax.Array, fzc: fz.FZConfig) -> jax.Array:
     return jnp.stack(d)
 
 
+def reference_hop(x: jax.Array, fzc: fz.FZConfig) -> tuple[jax.Array, jax.Array]:
+    """No-mesh reduce hop: (n_pods, n) -> (mean (n,), residual (n_pods, n))."""
+    d = _roundtrip_per_pod(x, fzc)
+    return jnp.mean(d, axis=0), x - d
+
+
+def pod_hop_body(xi: jax.Array, fzc: fz.FZConfig) -> tuple[jax.Array, jax.Array]:
+    """One leaf's wire hop, to be called INSIDE a shard_map over ``pod``.
+
+    ``xi``: this pod's (n,) f32 slice (gradient + replayed residual).
+    Compress locally, ``all_gather`` the container leaves over ``pod`` (the
+    only tensors that cross the pod boundary), decompress every pod's
+    container, mean; the residual is against this pod's own reconstruction.
+    Shared by the barrier reduce below and the bucketed reduce
+    (dist/bucketed_reduce.py) — their bit parity is by construction because
+    this is the single definition of the per-leaf math.
+    """
+    c = fz.compress(xi, fzc)
+    c_all = jax.tree.map(lambda leaf: jax.lax.all_gather(leaf, "pod"), c)
+    d = jax.vmap(lambda ci: fz.decompress(ci, fzc))(c_all)   # (n_pods, n)
+    red = jnp.mean(d, axis=0)
+    mine = jax.lax.dynamic_index_in_dim(
+        d, jax.lax.axis_index("pod"), 0, keepdims=False)
+    return red, (xi - mine)[None]
+
+
 def reduce_stacked(g_stack: Any, err_state: Any, cfg: GradCompressionConfig,
                    mesh=None) -> tuple[Any, Any]:
     """Compressed mean over a stacked leading pod dimension.
@@ -156,15 +200,7 @@ def reduce_stacked(g_stack: Any, err_state: Any, cfg: GradCompressionConfig,
         from repro.dist import compat
 
         def body(x_sh):
-            xi = x_sh[0]                                  # this pod's slice
-            c = fz.compress(xi, fzc)
-            # the wire hop: only capacity-sized container buffers cross pods
-            c_all = jax.tree.map(lambda leaf: jax.lax.all_gather(leaf, "pod"), c)
-            d = jax.vmap(lambda ci: fz.decompress(ci, fzc))(c_all)  # (n_pods, n)
-            red = jnp.mean(d, axis=0)
-            mine = jax.lax.dynamic_index_in_dim(
-                d, jax.lax.axis_index("pod"), 0, keepdims=False)
-            return red, (xi - mine)[None]
+            return pod_hop_body(x_sh[0], fzc)   # x_sh[0]: this pod's slice
 
         # fully manual (axis_names=None): data/model must also be manual so
         # the partitioner can never slice the FZ pipeline's scan axis — the
@@ -182,8 +218,7 @@ def reduce_stacked(g_stack: Any, err_state: Any, cfg: GradCompressionConfig,
         if has_pod:
             red, new_e = sharded_roundtrip(x)
         else:
-            d = _roundtrip_per_pod(x, fzc)
-            red, new_e = jnp.mean(d, axis=0), x - d
+            red, new_e = reference_hop(x, fzc)
         return (red.reshape(leaf_shape).astype(g.dtype),
                 new_e.reshape((n_pods,) + leaf_shape))
 

@@ -55,6 +55,7 @@ _ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
 _ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
 _CONSTANT = re.compile(r"constant\((-?\d+)\)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OP_NAME = re.compile(r'op_name="([^"]*)"')
 
 
 def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
@@ -220,11 +221,22 @@ def _trip_count(cond: Computation) -> int:
     return max(pos) if pos else 1
 
 
-def analyze(text: str, devices_per_pod: int | None = None) -> dict:
+def analyze(text: str, devices_per_pod: int | None = None,
+            tag_pattern: str | None = None) -> dict:
     """``devices_per_pod``: when set (multi-pod mesh), collectives whose
     replica groups span pods are accounted separately as cross-pod bytes
-    (they ride DCN, not ICI — see hlo_analysis.roofline_terms)."""
+    (they ride DCN, not ICI — see hlo_analysis.roofline_terms).
+
+    ``tag_pattern``: optional regex run over each cross-pod collective's
+    ``op_name`` metadata (which carries the jax ``named_scope`` stack
+    through compilation). Matching ops are additionally grouped under
+    ``cross_pod_by_tag[tag][collective]`` — this is how per-bucket wire
+    bytes of the bucketed compressed reduce are attributed and verified
+    against the analytic container model
+    (``dist.bucketed_reduce.expected_cross_pod_bytes``, tag pattern
+    ``dist.bucketed_reduce.BUCKET_TAG_PATTERN``)."""
     comps = parse_computations(text)
+    tag_re = re.compile(tag_pattern) if tag_pattern else None
 
     entry = None
     for name, c in comps.items():
@@ -290,6 +302,8 @@ def analyze(text: str, devices_per_pod: int | None = None) -> dict:
     coll_bytes = 0.0
     cross_pod_bytes = 0.0
     coll_detail: dict[str, float] = defaultdict(float)
+    cross_pod_by_tag: dict[str, dict[str, float]] = defaultdict(
+        lambda: defaultdict(float))
     for cname, c in comps.items():
         m_here = mult.get(cname, 0.0)
         if m_here == 0.0:
@@ -319,6 +333,12 @@ def analyze(text: str, devices_per_pod: int | None = None) -> dict:
                 if devices_per_pod and crosses_pod(op.rest, devices_per_pod):
                     cross_pod_bytes += m_here * b
                     coll_detail[base + "@pod"] += m_here * b
+                    if tag_re is not None:
+                        mo = _OP_NAME.search(op.rest)
+                        mt = tag_re.search(mo.group(1)) if mo else None
+                        if mt:
+                            tag = mt.group(1) if mt.groups() else mt.group(0)
+                            cross_pod_by_tag[tag][base] += m_here * b
                 else:
                     coll_bytes += m_here * b
                     coll_detail[base] += m_here * b
@@ -328,5 +348,6 @@ def analyze(text: str, devices_per_pod: int | None = None) -> dict:
         "collective_bytes": coll_bytes,
         "cross_pod_bytes": cross_pod_bytes,
         "collective_detail": dict(coll_detail),
+        "cross_pod_by_tag": {t: dict(d) for t, d in cross_pod_by_tag.items()},
         "n_computations": len(comps),
     }

@@ -5,16 +5,45 @@
 
 On a real fleet this process runs per host under the cluster scheduler
 (jax.distributed.initialize picks up the coordinator from the environment);
-on this box it drives the local mesh. XLA latency-hiding-scheduler flags for
-compute/communication overlap on TPU (documented here, harmless on CPU):
+on this box it drives the local mesh.
 
-    LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true
-        --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
-        --xla_enable_async_all_gather=true"
+``--overlap-reduce`` turns on the overlapped bucketed compressed-gradient
+reduce (dist/bucketed_reduce.py): it implies ``--compressed-grads``, routes
+the step through per-bucket compress/all_gather/decompress hops issued in
+backward production order, and exports the XLA latency-hiding-scheduler
+flags below (TPU compute/communication overlap; harmless on CPU) so the
+async all-gathers can actually hide inside the remaining backward compute.
+Off, the legacy end-of-step barrier reduce runs unchanged.
 """
 from __future__ import annotations
 
 import argparse
+import os
+
+# Latency-hiding-scheduler flags exported by --overlap-reduce (must land in
+# the environment before jax/libtpu initialize, hence before the imports in
+# main()). Async collective fusion lets the per-bucket all-gather-start /
+# -done pairs split around independent backward compute.
+OVERLAP_XLA_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_enable_async_all_gather=true"
+)
+
+
+def enable_overlap_scheduler_flags() -> None:
+    """Append the latency-hiding flags to LIBTPU_INIT_ARGS.
+
+    Idempotent by flag NAME: a flag the operator already set — to either
+    value, e.g. ``--xla_enable_async_all_gather=false`` to work around a
+    scheduler bug — is left alone rather than overridden with a conflicting
+    duplicate.
+    """
+    cur = os.environ.get("LIBTPU_INIT_ARGS", "")
+    missing = [f for f in OVERLAP_XLA_FLAGS.split()
+               if f.split("=", 1)[0] not in cur]
+    if missing:
+        os.environ["LIBTPU_INIT_ARGS"] = " ".join([cur, *missing]).strip()
 
 
 def main() -> None:
@@ -29,9 +58,17 @@ def main() -> None:
     p.add_argument("--model-parallel", type=int, default=1)
     p.add_argument("--pods", type=int, default=1)
     p.add_argument("--compressed-grads", action="store_true")
+    p.add_argument("--overlap-reduce", action="store_true",
+                   help="bucketed overlapped compressed reduce + latency-hiding "
+                        "scheduler flags (implies --compressed-grads)")
+    p.add_argument("--bucket-bytes", type=int, default=4 << 20,
+                   help="wire-byte target per reduce bucket (--overlap-reduce)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-codec", choices=["raw", "fz"], default="raw")
     args = p.parse_args()
+
+    if args.overlap_reduce:
+        enable_overlap_scheduler_flags()   # before jax initializes below
 
     from repro import configs
     from repro.configs.base import SHAPES, ShapeConfig
@@ -51,13 +88,18 @@ def main() -> None:
     tcfg = TrainConfig(
         microbatches=args.microbatches, total_steps=args.steps,
         warmup_steps=max(args.steps // 10, 1),
-        grad_compress=GradCompressionConfig(enabled=args.compressed_grads))
+        grad_compress=GradCompressionConfig(
+            enabled=args.compressed_grads or args.overlap_reduce,
+            overlap=args.overlap_reduce, bucket_bytes=args.bucket_bytes))
     stream = TokenStream(vocab_size=cfg.vocab, seq_len=shape.seq_len,
                          global_batch=shape.global_batch, seed=0)
     trainer = Trainer(model, shape, mesh, tcfg, stream=stream,
                       ckpt_dir=args.ckpt_dir, ckpt_codec=args.ckpt_codec)
+    reduce_mode = ("bucketed-overlap" if args.overlap_reduce else
+                   "barrier" if tcfg.grad_compress.enabled else "exact")
     print(f"{cfg.arch_id}: {model.param_count()/1e6:.1f}M params, "
-          f"mesh={dict(mesh.shape)}, resume_step={trainer.step}")
+          f"mesh={dict(mesh.shape)}, reduce={reduce_mode}, "
+          f"resume_step={trainer.step}")
     hist = trainer.run(args.steps - trainer.step)
     for m in hist[:: max(len(hist) // 10, 1)]:
         print(f"step {m['step']:5d} loss {m['loss']:.4f} ({m['seconds']:.2f}s)")

@@ -64,6 +64,31 @@ def shard_act(x: jax.Array, logical: tuple) -> jax.Array:
     return _ACT_SHARDER(x, logical)
 
 
+# ---------------------------------------------------------------------------
+# Gradient-boundary taps
+#
+# Model code marks where each parameter group's cotangents become final
+# (grad_tap at the use sites); the overlap-reduce step builder installs
+# dist/bucketed_reduce.grad_boundary here so those cotangents are pinned as
+# independent scheduling units for the per-bucket compressed reduce. With no
+# tap installed (the default, and every non-overlap path) it is a no-op.
+# ---------------------------------------------------------------------------
+
+_GRAD_TAP: Callable[[Any, str], Any] | None = None
+
+
+def set_grad_tap(fn: Callable[[Any, str], Any] | None) -> None:
+    global _GRAD_TAP
+    _GRAD_TAP = fn
+
+
+def grad_tap(tree: Any, name: str = "") -> Any:
+    """Mark a parameter-group gradient boundary (identity unless installed)."""
+    if _GRAD_TAP is None:
+        return tree
+    return _GRAD_TAP(tree, name)
+
+
 @dataclasses.dataclass(frozen=True)
 class Param:
     shape: tuple[int, ...]

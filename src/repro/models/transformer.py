@@ -121,10 +121,19 @@ def _positions(cfg: ArchConfig, batch: dict, S: int, B: int):
 
 
 def forward_train(params: dict, cfg: ArchConfig, batch: dict):
-    """batch: tokens (B,S) [+ positions for vlm]. Returns (loss, aux)."""
+    """batch: tokens (B,S) [+ positions for vlm]. Returns (loss, aux).
+
+    Parameter groups pass through ``nn.grad_tap`` at their use sites — the
+    layer-boundary hooks of the overlapped bucketed reduce. The scanned
+    layer stack is one boundary (its stacked cotangents all materialize when
+    the backward scan finishes); embed / final_norm / unembed are their own
+    (their cotangents exist last / early / first in the backward pass).
+    Identity unless the overlap step builder installs a tap.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
-    x = nn.shard_act(nn.embed_lookup(tokens, params["embed"]), ("dp", None, None))
+    x = nn.shard_act(nn.embed_lookup(tokens, nn.grad_tap(params["embed"], "embed")),
+                     ("dp", None, None))
     pos = _positions(cfg, batch, S, B)
 
     def body(x, lp):
@@ -132,9 +141,10 @@ def forward_train(params: dict, cfg: ArchConfig, batch: dict):
         return nn.shard_act(y, ("dp", None, None)), aux
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    x, auxs = jax.lax.scan(body_fn, x, params["layers"])
-    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = nn.shard_act(nn.dense(x, params["unembed"]), ("dp", None, "tp"))
+    x, auxs = jax.lax.scan(body_fn, x, nn.grad_tap(params["layers"], "layers"))
+    x = nn.rms_norm(x, nn.grad_tap(params["final_norm"], "final_norm"), cfg.norm_eps)
+    logits = nn.shard_act(nn.dense(x, nn.grad_tap(params["unembed"], "unembed")),
+                          ("dp", None, "tp"))
     loss = nn.sharded_xent(logits, batch["labels"])
     return loss + 0.01 * jnp.sum(auxs), {"xent": loss}
 

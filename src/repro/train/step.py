@@ -21,9 +21,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist import bucketed_reduce as bkt
 from repro.dist import compressed_allreduce as car
 from repro.dist import sharding as shd
-from repro.models import zoo
+from repro.models import nn, zoo
 from repro.optim import AdamWConfig, adamw_init, adamw_update, global_norm, warmup_cosine
 
 
@@ -43,13 +44,23 @@ def _named(mesh, spec_tree_, abstract_tree):
 
 def _install_act_sharder(mesh) -> None:
     """Route model-side nn.shard_act calls to this mesh (trace-time global)."""
-    from repro.models import nn
 
     def sharder(x, logical):
         spec = shd.resolve_spec(tuple(logical), x.shape, mesh)
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
     nn.set_act_sharder(sharder)
+
+
+def _install_grad_tap(overlap: bool) -> None:
+    """Arm (or disarm) the model-side gradient-boundary taps: with the
+    overlapped bucketed reduce, each parameter group's cotangents pass
+    through an optimization_barrier so the per-bucket hops see real
+    boundaries. The tap is a trace-time global (same idiom as the act
+    sharder) but jit traces lazily, so each step function calls this at the
+    TOP OF ITS OWN BODY — building several steps in any order and calling
+    them later still traces each with its own tap state."""
+    nn.set_grad_tap(bkt.grad_boundary if overlap else None)
 
 
 def _loss_and_grads(model: zoo.Model, params, batch, n_micro: int):
@@ -103,6 +114,7 @@ def build_train_step(model: zoo.Model, shape: ShapeConfig, mesh, tcfg: TrainConf
                 for k, v in in_structs.items()}
 
     use_pod_compress = tcfg.grad_compress.enabled and "pod" in mesh.axis_names
+    overlap = use_pod_compress and tcfg.grad_compress.overlap
     n_pods = mesh.shape.get("pod", 1)
 
     def _finish(loss, grads, params, opt_state, step_idx):
@@ -114,9 +126,16 @@ def build_train_step(model: zoo.Model, shape: ShapeConfig, mesh, tcfg: TrainConf
 
     if use_pod_compress:
         # per-pod gradients via vmap over a leading pod dim (loss/backward
-        # stay pure-auto SPMD); the reduce hop itself is a manual shard_map
-        # over 'pod' with error feedback — see dist/compressed_allreduce.py.
+        # stay pure-auto SPMD); the reduce hops themselves are manual
+        # shard_maps over 'pod' with error feedback. Barrier form (one hop
+        # per leaf after the full backward): dist/compressed_allreduce.py;
+        # overlap form (size-targeted buckets issued in backward production
+        # order, grad_boundary taps armed): dist/bucketed_reduce.py.
+        plan = bkt.assign_buckets(abstract, tcfg.grad_compress) if overlap else None
+
         def step(params, opt_state, err_state, step_idx, batch):
+            _install_grad_tap(overlap)   # runs at trace time, see helper
+
             def split(x):
                 b = x.shape[0]
                 return x.reshape((n_pods, b // n_pods) + x.shape[1:])
@@ -128,8 +147,12 @@ def build_train_step(model: zoo.Model, shape: ShapeConfig, mesh, tcfg: TrainConf
                 return l, g
 
             losses, grads_stacked = jax.vmap(pod_loss, in_axes=(None, 0))(params, pods_batch)
-            grads, err_state = car.reduce_stacked(grads_stacked, err_state,
-                                                  tcfg.grad_compress, mesh)
+            if overlap:
+                grads, err_state = bkt.reduce_stacked_bucketed(
+                    grads_stacked, err_state, tcfg.grad_compress, mesh, plan=plan)
+            else:
+                grads, err_state = car.reduce_stacked(grads_stacked, err_state,
+                                                      tcfg.grad_compress, mesh)
             p, o, m = _finish(jnp.mean(losses), grads, params, opt_state, step_idx)
             return p, o, err_state, m
 
@@ -138,6 +161,7 @@ def build_train_step(model: zoo.Model, shape: ShapeConfig, mesh, tcfg: TrainConf
         err_sh_fn = lambda ga: car.error_state_shardings(ga, tcfg.grad_compress, mesh)
     else:
         def step(params, opt_state, err_state, step_idx, batch):
+            _install_grad_tap(False)     # runs at trace time, see helper
             loss, grads = _loss_and_grads(model, params, batch, tcfg.microbatches)
             p, o, m = _finish(loss, grads, params, opt_state, step_idx)
             return p, o, err_state, m
