@@ -3,6 +3,14 @@
 CPU-proxy numbers (relative across error bounds and vs. baselines-in-repo;
 the absolute GB/s claims in the paper require the target accelerator).
 Includes compression AND the symmetric decompression path (§4.4 note).
+
+Beyond the paper's figures, every (kind, eb) point now runs the three FZ
+execution paths — ``reference`` (pure jnp), ``staged`` (per-stage Pallas
+kernels + XLA phase 2) and ``fused`` (single-launch megakernels) — so the CI
+bench tier tracks compressor throughput per PR for all of them. The returned
+rows are machine-readable; ``scripts/ci.sh bench`` asserts all three paths
+land in BENCH_ci.json and all three are bit-identical on the sampled field
+(ratio and container bytes must agree exactly).
 """
 from __future__ import annotations
 
@@ -11,39 +19,57 @@ import jax.numpy as jnp
 
 from repro.core import baselines, fz
 from repro.data import make_field
-from .common import PAPER_EBS, gbps, timeit
+from .common import FZ_PATHS, PAPER_EBS, fz_path_config, gbps, timeit
 
 
-def run(shape=(128, 128, 64), kinds=("smooth", "turbulent")):
+def run(shape=(128, 128, 64), kinds=("smooth", "turbulent"), ebs=PAPER_EBS,
+        paths=FZ_PATHS):
     rows = []
     for kind in kinds:
         f = jnp.asarray(make_field(kind, shape, seed=5))
         nbytes = f.size * 4
-        for eb in PAPER_EBS:
-            cfg = fz.FZConfig(eb=eb, exact_outliers=False)
-            comp = jax.jit(lambda x: fz.compress(x, cfg))
-            c = comp(f)
-            dec = jax.jit(lambda cc: fz.decompress(cc, cfg))
-            t_c = timeit(comp, f)
-            t_d = timeit(dec, c)
-            cr = float(c.compression_ratio())
-            rows.append((f"fz-compress[{kind},{eb:.0e}]", t_c, nbytes, cr))
-            rows.append((f"fz-decompress[{kind},{eb:.0e}]", t_d, nbytes, cr))
+        for eb in ebs:
+            used = {}
+            for path in paths:
+                cfg = fz_path_config(path, eb)
+                comp = jax.jit(lambda x, cfg=cfg: fz.compress(x, cfg))
+                c = comp(f)
+                dec = jax.jit(lambda cc, cfg=cfg: fz.decompress(cc, cfg))
+                t_c, t_d = timeit(comp, f), timeit(dec, c)
+                cr = float(c.compression_ratio())
+                used[path] = int(c.used_bytes())
+                for direction, secs in (("compress", t_c), ("decompress", t_d)):
+                    rows.append({
+                        "pipeline": f"fz-{direction}[{kind},{eb:.0e},{path}]",
+                        "kind": kind, "eb": eb, "path": path,
+                        "direction": direction, "us": secs * 1e6,
+                        "gbps": gbps(nbytes, secs), "ratio": cr,
+                    })
+            # the three paths share one oracle: exact byte agreement
+            assert len(set(used.values())) == 1, \
+                f"paths disagree on container bytes: {used}"
         # cuSZx-like comparison point (the paper's fastest baseline)
         ebj = jnp.float32(1e-3 * float(jnp.max(f) - jnp.min(f)))
         cx = jax.jit(lambda x: baselines.cuszx_like(x, ebj))
         t_x = timeit(cx, f)
         _, bx = cx(f)
-        rows.append((f"cuszx-like[{kind},1e-3]", t_x, nbytes, nbytes / float(bx)))
+        rows.append({"pipeline": f"cuszx-like[{kind},1e-3]", "kind": kind,
+                     "eb": 1e-3, "path": "baseline", "direction": "compress",
+                     "us": t_x * 1e6, "gbps": gbps(nbytes, t_x),
+                     "ratio": nbytes / float(bx)})
     return rows
 
 
-def main():
-    rows = run()
+def main(smoke=False):
+    if smoke:
+        # CI preset: small field, two bounds, all three paths
+        rows = run(shape=(32, 64, 32), kinds=("smooth",), ebs=(1e-2, 1e-4))
+    else:
+        rows = run()
     print("pipeline,us_per_call,cpu_proxy_GBps,compression_ratio")
-    for name, secs, nbytes, cr in rows:
-        print(f"{name},{secs * 1e6:.0f},{gbps(nbytes, secs):.3f},{cr:.2f}")
-    return rows
+    for r in rows:
+        print(f"{r['pipeline']},{r['us']:.0f},{r['gbps']:.3f},{r['ratio']:.2f}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

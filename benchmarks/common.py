@@ -7,7 +7,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fz
+
 PAPER_EBS = (1e-2, 5e-3, 1e-3, 5e-4, 1e-4)  # the paper's relative bounds
+
+FZ_PATHS = ("reference", "staged", "fused")  # the three execution paths
+
+
+def fz_path_config(path: str, eb: float) -> fz.FZConfig:
+    """One FZConfig per execution path (core/fz.py module docstring), shared
+    by every benchmark so the path matrix can't silently diverge."""
+    if path not in FZ_PATHS:
+        raise ValueError(f"unknown FZ path {path!r}; choose from {FZ_PATHS}")
+    return fz.FZConfig(eb=eb, exact_outliers=False,
+                       use_kernels=path != "reference",
+                       kernel_mode=path if path != "reference" else "fused")
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -30,12 +30,14 @@ case "$tier" in
     ;;
   slow) exec python -m pytest -q -m slow ;;
   bench)
-    # perf-trajectory smoke: tiny-shape kvcache decode + the barrier-vs-
-    # bucketed overlap sweep, one machine-readable BENCH_ci.json at the repo
-    # root (the workflow uploads it as an artifact — every CI run appends a
+    # perf-trajectory smoke: tiny-shape kvcache decode, the barrier-vs-
+    # bucketed overlap sweep, AND compressor throughput (compress/decompress
+    # GB/s + ratio for the reference / staged / fused execution paths over a
+    # small shape grid) — one machine-readable BENCH_ci.json at the repo root
+    # (the workflow uploads it as an artifact — every CI run appends a
     # datapoint to the trajectory instead of leaving BENCH_* empty)
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
-        --only kvcache,overlap --smoke --json-out BENCH_ci.json
+        --only throughput,kvcache,overlap --smoke --json-out BENCH_ci.json
     python - <<'PY'
 import json
 doc = json.load(open("BENCH_ci.json"))
@@ -43,8 +45,16 @@ rows = doc["sections"]["overlap"]["rows"]
 modes = {r["mode"] for r in rows}
 assert {"barrier", "bucketed"} <= modes, f"missing reduce modes: {modes}"
 assert doc["sections"]["kvcache"]["decode_ms"], "kvcache decode rows missing"
+trows = doc["sections"]["throughput"]["rows"]
+paths = {r["path"] for r in trows}
+assert {"reference", "staged", "fused"} <= paths, f"missing FZ paths: {paths}"
+for d in ("compress", "decompress"):
+    n = sum(1 for r in trows if r["direction"] == d and r["path"] in
+            ("reference", "staged", "fused"))
+    assert n >= 6, f"too few {d} throughput rows: {n}"
+assert all(r["gbps"] > 0 and r["ratio"] > 0 for r in trows), "bad rows"
 print(f"BENCH_ci.json OK: sections={sorted(doc['sections'])}, "
-      f"{len(rows)} overlap rows")
+      f"{len(rows)} overlap rows, {len(trows)} compressor rows")
 PY
     ;;
   all)  exec python -m pytest -q ;;

@@ -47,6 +47,23 @@ def unpack_bitflags(bitflags: jax.Array, n_blocks: int) -> jax.Array:
     return bits.reshape(-1)[:n_blocks].astype(bool)
 
 
+def compact_blocks(flags: jax.Array, blocks: jax.Array, *, capacity: int):
+    """XLA phase-2 compaction: (flags bool[n_blocks], blocks u16[n_blocks, 8])
+    -> (bitflags u32[W], payload u16[capacity, 8], nnz i32[]).
+
+    The gather-based scan+take formulation, shared by :func:`encode` and the
+    staged kernel path (``kernels.ops.bitshuffle_flag_encode``). The fused
+    megakernel (kernels/fused_compress.py) replaces this wholesale with an
+    in-kernel running-offset scatter; this stays as its oracle.
+    """
+    nnz = jnp.sum(flags, dtype=jnp.int32)
+    (src,) = jnp.nonzero(flags, size=capacity, fill_value=0)
+    payload = blocks[src]
+    # slots past nnz replicate block 0; zero them so payload is deterministic
+    payload = jnp.where(jnp.arange(capacity)[:, None] < nnz, payload, 0)
+    return pack_bitflags(flags), payload.astype(jnp.uint16), nnz
+
+
 @partial(jax.jit, static_argnames=("capacity",))
 def encode(shuffled: jax.Array, *, capacity: int):
     """Compact non-zero blocks.
@@ -58,12 +75,7 @@ def encode(shuffled: jax.Array, *, capacity: int):
     """
     blocks = shuffled.reshape(-1, BLOCK_WORDS)
     flags = jnp.any(blocks != 0, axis=-1)
-    nnz = jnp.sum(flags, dtype=jnp.int32)
-    (src,) = jnp.nonzero(flags, size=capacity, fill_value=0)
-    payload = blocks[src]
-    # slots past nnz replicate block 0; zero them so payload is deterministic
-    payload = jnp.where(jnp.arange(capacity)[:, None] < nnz, payload, 0)
-    return pack_bitflags(flags), payload.astype(jnp.uint16), nnz
+    return compact_blocks(flags, blocks, capacity=capacity)
 
 
 @partial(jax.jit, static_argnames=("n_blocks",))

@@ -6,10 +6,27 @@ tensor is an ordinary pytree that can flow through jit / shard_map /
 collectives — this is what makes the compressor a first-class distributed
 feature (gradient compression, KV-cache pages, checkpoint payloads).
 
-Two execution paths, selected by ``FZConfig.use_kernels``:
-  * pure-jnp reference (core.quant/shuffle/encode) — the oracle;
-  * Pallas TPU kernels (kernels/ops.py) — fused quant and shuffle+flag kernels
-    mirroring the paper's fused CUDA kernels (interpret mode on CPU).
+Three execution paths, selected by ``FZConfig.use_kernels`` /
+``FZConfig.kernel_mode``:
+
+  * ``use_kernels=False`` — pure-jnp reference (core.quant/shuffle/encode),
+    the oracle everything else is pinned against;
+  * ``use_kernels=True, kernel_mode="staged"`` — the per-stage Pallas kernels
+    (fused quant kernel, fused shuffle+flag kernel, XLA ``cumsum``/``nonzero``
+    phase-2 epilogue); the u16 code stream round-trips HBM between launches.
+    Retained as a second oracle next to the reference;
+  * ``use_kernels=True, kernel_mode="fused"`` (the kernel default) — one
+    compress megakernel and one decompress megakernel
+    (kernels/fused_compress.py, kernels/fused_decode.py): quant + Lorenzo +
+    bitshuffle + flagging + phase-2 compaction in a single launch (and the
+    full inverse pipeline in another), with the code stream, shuffled words
+    and payload offsets living entirely in VMEM/SMEM scratch. With the
+    exact-outlier channel on, quantization routes through the reference to
+    harvest residuals and the rest stays fused (see
+    kernels/ops.py:fused_compress_stages for the documented reason).
+
+All three produce bit-identical containers and reconstructions (pinned by
+the three-way property suite in tests/test_fz_properties.py).
 """
 from __future__ import annotations
 
@@ -34,6 +51,11 @@ class FZConfig:
     outlier_frac: float = 1 / 256  # exact-outlier side-channel capacity fraction
     exact_outliers: bool = True    # strict error bound (beyond-paper); False = paper-faithful
     use_kernels: bool = False      # route hot stages through Pallas kernels
+    kernel_mode: str = "fused"     # "fused" megakernels | "staged" per-stage oracle
+
+    def __post_init__(self):
+        if self.kernel_mode not in ("fused", "staged"):
+            raise ValueError(f"unknown kernel_mode {self.kernel_mode!r}")
 
     def payload_capacity(self, n: int) -> int:
         n_blocks = self.n_blocks(n)
@@ -105,8 +127,16 @@ def resolve_eb(data: jax.Array, cfg: FZConfig) -> jax.Array:
     raise ValueError(f"unknown eb_mode {cfg.eb_mode!r}")
 
 
+def _fused(cfg: FZConfig) -> bool:
+    return cfg.use_kernels and cfg.kernel_mode == "fused"
+
+
 def _stages(cfg: FZConfig):
-    """Pick reference vs Pallas-kernel implementations of the hot stages."""
+    """Pick reference vs staged-Pallas implementations of the hot stages.
+
+    The fused megakernel path doesn't decompose into these three stages —
+    ``_compress_core`` / ``decompress`` route it wholesale via ``_fused``.
+    """
     if cfg.use_kernels:
         from repro.kernels import ops as kops
         return kops.lorenzo_quantize, kops.bitshuffle_flag_encode, kops.bitunshuffle
@@ -163,6 +193,16 @@ def compress_with_eb(data: jax.Array, eb_abs: jax.Array, cfg: FZConfig) -> FZCom
 
 def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig,
                    dtype_name: str = "float32") -> FZCompressed:
+    if _fused(cfg):
+        from repro.kernels import ops as kops
+        bitflags, payload, nnz, oidx, oval, n_over = kops.fused_compress_stages(
+            data, eb, code_mode=cfg.code_mode,
+            capacity=cfg.payload_capacity(data.size),
+            outlier_capacity=cfg.outlier_capacity(data.size))
+        return FZCompressed(bitflags=bitflags, payload=payload, nnz_blocks=nnz,
+                            outlier_idx=oidx, outlier_val=oval,
+                            n_outliers=jnp.minimum(n_over, oidx.size).astype(jnp.int32),
+                            eb_abs=eb, shape=tuple(data.shape), dtype_name=dtype_name)
     quantize, shuffle_encode, _ = _stages(cfg)
     codes, oidx, oval, n_over = quantize(
         data, eb, code_mode=cfg.code_mode,
@@ -178,6 +218,13 @@ def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig,
 @partial(jax.jit, static_argnames=("cfg",))
 def decompress(c: FZCompressed, cfg: FZConfig) -> jax.Array:
     """Inverse pipeline: decode -> bit-unshuffle -> inverse Lorenzo -> dequant."""
+    if _fused(cfg):
+        from repro.kernels import ops as kops
+        return kops.fused_decompress(
+            c.bitflags, c.payload, c.eb_abs, shape=c.shape,
+            code_mode=cfg.code_mode,
+            outlier_idx=c.outlier_idx if cfg.exact_outliers else None,
+            outlier_val=c.outlier_val if cfg.exact_outliers else None)
     _, _, unshuffle = _stages(cfg)
     words = enc.decode(c.bitflags, c.payload, n_blocks=FZConfig.n_blocks(c.n))
     codes = unshuffle(words)[: c.n]

@@ -7,6 +7,13 @@ instead of hiding inside it (the paper's §2.4 argument is exactly that
 compression only pays when it hides inside the movement it saves). This
 module restructures the same math into independently schedulable pieces:
 
+  * Per-leaf FZ hops inherit ``GradCompressionConfig.use_kernels`` /
+    ``kernel_mode`` through the shared ``fz_config()``: with kernels on,
+    every bucket hop's compress and decompress run as the single-launch
+    megakernels (kernels/fused_compress, kernels/fused_decode) inside the
+    shard_map region. Compression stays strictly per leaf, so the barrier
+    ``reduce_stacked`` remains a bit-parity oracle under every kernel
+    flavor — the fused/staged/reference paths produce identical containers.
   * ``assign_buckets`` partitions the gradient pytree into size-targeted
     buckets (``GradCompressionConfig.bucket_bytes`` of *wire* bytes each).
     The assignment is a pure function of the abstract gradient tree and the

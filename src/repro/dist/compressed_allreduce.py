@@ -72,6 +72,13 @@ class GradCompressionConfig:
     # pass; off keeps the legacy single-barrier reduce below.
     overlap: bool = False
     bucket_bytes: int = 4 << 20
+    # per-leaf FZ hops through the Pallas kernels ("fused" = single-launch
+    # megakernels, "staged" = per-stage oracle); off keeps the jnp reference.
+    # Both reduces (barrier reduce_stacked and the bucketed hops) share this
+    # config, so the bit-parity oracle relationship between them holds under
+    # every kernel flavor.
+    use_kernels: bool = False
+    kernel_mode: str = "fused"
 
     def fz_config(self) -> fz.FZConfig:
         # exact_outliers off: saturation error (like dropped blocks when
@@ -79,7 +86,9 @@ class GradCompressionConfig:
         return fz.FZConfig(eb=self.eb, eb_mode=self.eb_mode,
                            code_mode=self.code_mode,
                            capacity_frac=self.capacity_frac,
-                           exact_outliers=False)
+                           exact_outliers=False,
+                           use_kernels=self.use_kernels,
+                           kernel_mode=self.kernel_mode)
 
 
 def _compressible(shape: tuple[int, ...], dtype, cfg: GradCompressionConfig) -> bool:

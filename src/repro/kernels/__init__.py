@@ -3,8 +3,14 @@
 kernel modules (pl.pallas_call + BlockSpec VMEM tiling):
     lorenzo_quant    -- fused pre-quantization + Lorenzo + sign-mag codes
     bitshuffle_flag  -- fused bitshuffle + zero-block flags (paper's fusion)
+    fused_compress   -- single-launch compress megakernel: quant + Lorenzo +
+                        shuffle + flags + in-kernel phase-2 compaction; the
+                        code stream never touches HBM
+    fused_decode     -- single-launch decompress megakernel: flag unpack +
+                        offset-gather decode + unshuffle + inverse Lorenzo
     flash_decode     -- block-parallel KV-tile decode attention (contiguous
                         + paged layouts; serving hot path)
 ops.py -- jit wrappers (interpret-mode fallback off-TPU); ref.py -- oracles.
 """
-from . import bitshuffle_flag, flash_decode, lorenzo_quant, ops, ref  # noqa: F401
+from . import (bitshuffle_flag, flash_decode, fused_compress,  # noqa: F401
+               fused_decode, lorenzo_quant, ops, ref)

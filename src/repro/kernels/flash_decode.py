@@ -51,7 +51,8 @@ KV_TILE = 128          # default KV positions per grid step (TPU lane width)
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    from . import ops
+    return ops.backend_interpret()   # the package's one backend check
 
 
 def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, m_ref, num_ref, den_ref,

@@ -59,26 +59,38 @@ def _shift_prepend(q: jax.Array, first, axis: int) -> jax.Array:
     return jax.lax.concatenate([first, tail], dimension=axis)
 
 
+def band_codes(x_band: jax.Array, halo: jax.Array, two_eb: jax.Array, *,
+               ndim: int, code_mode: str, is_first) -> jax.Array:
+    """Kernel-body helper: one band of input + 1-row halo -> u16 Lorenzo codes.
+
+    Shared between the standalone quantization kernel below and the fused
+    compress megakernel (kernels/fused_compress.py) so both paths stay
+    bit-identical by construction. ``is_first`` masks the (clamped) halo of
+    the first band to the zero boundary condition.
+    """
+    q = _prequant(x_band, two_eb)
+    h = _prequant(halo, two_eb)
+    h = jnp.where(is_first, jnp.zeros_like(h), h)
+    if ndim == 1:
+        # flattened-1D layout (rows, C): continuous diff across row ends.
+        # previous element of col 0 = last col of previous row; for the
+        # band's first row that is the halo row's last element.
+        prev_last = _shift_prepend(q[:, -1:], h[:, -1:], axis=0)  # (band, 1)
+        d = q - _shift_prepend(q, prev_last, axis=1)
+    else:
+        # leading-axis diff uses the halo slice; trailing axes internal.
+        d = q - _shift_prepend(q, h, axis=0)
+        for ax in range(1, ndim):
+            zero = jnp.zeros_like(jax.lax.slice_in_dim(d, 0, 1, axis=ax))
+            d = d - _shift_prepend(d, zero, axis=ax)
+    return _to_code(d, code_mode)
+
+
 def _make_kernel(ndim: int, code_mode: str):
     def kernel(x_ref, halo_ref, eb_ref, out_ref):
-        two_eb = 2.0 * eb_ref[0, 0]
-        q = _prequant(x_ref[...], two_eb)
-        is_first = pl.program_id(0) == 0
-        halo = _prequant(halo_ref[...], two_eb)
-        halo = jnp.where(is_first, jnp.zeros_like(halo), halo)
-        if ndim == 1:
-            # flattened-1D layout (rows, C): continuous diff across row ends.
-            # previous element of col 0 = last col of previous row; for the
-            # band's first row that is the halo row's last element.
-            prev_last = _shift_prepend(q[:, -1:], halo[:, -1:], axis=0)  # (band, 1)
-            d = q - _shift_prepend(q, prev_last, axis=1)
-        else:
-            # leading-axis diff uses the halo slice; trailing axes internal.
-            d = q - _shift_prepend(q, halo, axis=0)
-            for ax in range(1, ndim):
-                zero = jnp.zeros_like(jax.lax.slice_in_dim(d, 0, 1, axis=ax))
-                d = d - _shift_prepend(d, zero, axis=ax)
-        out_ref[...] = _to_code(d, code_mode)
+        out_ref[...] = band_codes(x_ref[...], halo_ref[...], 2.0 * eb_ref[0, 0],
+                                  ndim=ndim, code_mode=code_mode,
+                                  is_first=pl.program_id(0) == 0)
     return kernel
 
 

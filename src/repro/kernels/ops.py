@@ -3,11 +3,23 @@
 Interpret-mode fallback: on non-TPU backends (this container is CPU) the
 kernels execute through the Pallas interpreter, which runs the kernel body
 in Python/XLA for bit-exact validation against ref.py. On TPU the same
-pallas_call lowers to Mosaic.
+pallas_call lowers to Mosaic. ``backend_interpret()`` is the one shared
+backend check — benchmarks and callers outside this package route through it
+instead of hardcoding ``interpret=True``.
 
-Signature compatibility: these wrappers expose the same interfaces as the
-reference stages in repro.core so FZConfig(use_kernels=True) swaps them in
-transparently (see core/fz.py:_stages).
+Two kernel flavors, selected by ``FZConfig.kernel_mode`` (see core/fz.py):
+
+  * ``"fused"`` (default): single-launch megakernels — the whole compress
+    pipeline in one pallas_call (fused_compress.py) and the whole decompress
+    pipeline in another (fused_decode.py); the code stream never touches HBM.
+  * ``"staged"``: the PR-3-era two-kernel path (lorenzo_quant, then
+    bitshuffle_flag with an XLA phase-2 epilogue) — retained as a second
+    oracle next to the pure-jnp reference.
+
+Signature compatibility: the staged wrappers expose the same interfaces as
+the reference stages in repro.core so FZConfig swaps them in transparently
+(see core/fz.py:_stages); the fused wrappers produce whole containers' worth
+of fields per call.
 """
 from __future__ import annotations
 
@@ -18,15 +30,31 @@ import jax.numpy as jnp
 
 from repro.core import encode as _enc
 from repro.core import quant as _quant
+from repro.core import shuffle as _shuffle
 from . import bitshuffle_flag as _bsf
+from . import fused_compress as _fc
+from . import fused_decode as _fd
 from . import lorenzo_quant as _lq
 
 TILE = _bsf.TILE
 
 
-def _interpret() -> bool:
+def backend_interpret() -> bool:
+    """True when the Pallas kernels must run under the interpreter (non-TPU).
+
+    The single source of truth for backend routing: kernels lower to Mosaic
+    exactly when the default backend is a TPU, and benchmarks that want "the
+    real lowering where available" ask here instead of pinning interpret=True.
+    """
     return jax.default_backend() != "tpu"
 
+
+_interpret = backend_interpret  # intra-module shorthand
+
+
+# ---------------------------------------------------------------------------
+# Staged kernel path ("kernel_mode=staged"): per-stage launches, XLA phase 2
+# ---------------------------------------------------------------------------
 
 def lorenzo_quantize(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_mag",
                      outlier_capacity: int = 0):
@@ -57,11 +85,8 @@ def bitshuffle_flag_encode(codes_flat: jax.Array, *, capacity: int):
     tiles = codes_flat.reshape(-1, TILE)
     shuffled, byteflags = _bsf.bitshuffle_flag(tiles, interpret=_interpret())
     flags = byteflags.reshape(-1).astype(bool)
-    nnz = jnp.sum(flags, dtype=jnp.int32)
-    (src,) = jnp.nonzero(flags, size=capacity, fill_value=0)
-    payload = shuffled.reshape(-1, _enc.BLOCK_WORDS)[src]
-    payload = jnp.where(jnp.arange(capacity)[:, None] < nnz, payload, 0)
-    return _enc.pack_bitflags(flags), payload.astype(jnp.uint16), nnz
+    return _enc.compact_blocks(
+        flags, shuffled.reshape(-1, _enc.BLOCK_WORDS), capacity=capacity)
 
 
 @jax.jit
@@ -76,3 +101,46 @@ def bitunshuffle(words_flat: jax.Array) -> jax.Array:
     """Inverse transform kernel, same signature as core.shuffle.bitunshuffle."""
     tiles = words_flat.reshape(-1, TILE)
     return _bsf.bitunshuffle_tiles(tiles, interpret=_interpret()).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Fused megakernel path ("kernel_mode=fused"): one launch per direction
+# ---------------------------------------------------------------------------
+
+def fused_compress_stages(data: jax.Array, eb: jax.Array, *,
+                          code_mode: str, capacity: int,
+                          outlier_capacity: int = 0):
+    """One-launch compress: (bitflags, payload, nnz, oidx, oval, n_over).
+
+    Outlier routing is EXPLICIT here (not a silent fallback): the exact
+    residual side channel needs the unsaturated int32 deltas, and the fused
+    megakernel by design never materializes them (codes are born saturated
+    in VMEM). With ``outlier_capacity > 0`` the pipeline therefore routes
+    quantization through the reference implementation to harvest the
+    residuals and runs the fused shuffle+flag+compaction megakernel on the
+    resulting codes — still no shuffled-stream HBM round trip, and the
+    strict error bound is preserved (pinned in tests/test_kernels.py).
+    """
+    if outlier_capacity > 0:
+        codes, oidx, oval, n_over = _quant.dual_quantize(
+            data, eb, code_mode=code_mode, outlier_capacity=outlier_capacity)
+        flat = _shuffle.pad_to_tiles(codes.reshape(-1))
+        bitflags, payload, nnz = _fc.fused_shuffle_encode(
+            flat, capacity=capacity, interpret=_interpret())
+        return bitflags, payload, nnz, oidx, oval, n_over
+    bitflags, payload, nnz = _fc.fused_compress(
+        data, eb, capacity=capacity, code_mode=code_mode,
+        interpret=_interpret())
+    zero_i = jnp.zeros((0,), jnp.int32)
+    return bitflags, payload, nnz, zero_i, zero_i, jnp.int32(0)
+
+
+def fused_decompress(bitflags: jax.Array, payload: jax.Array, eb: jax.Array, *,
+                     shape: tuple[int, ...], code_mode: str,
+                     outlier_idx: jax.Array | None = None,
+                     outlier_val: jax.Array | None = None) -> jax.Array:
+    """One-launch decompress mirroring :func:`fused_compress_stages`."""
+    return _fd.fused_decompress(
+        bitflags, payload, eb, shape=tuple(shape), code_mode=code_mode,
+        outlier_idx=outlier_idx, outlier_val=outlier_val,
+        interpret=_interpret())

@@ -79,6 +79,52 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def compiled_memory_traffic(compiled) -> dict:
+    """Buffer-assignment HBM-traffic proxy for a compiled executable.
+
+    Model: arguments are read once, outputs written once, and every temp
+    (XLA-materialized intermediate) is written once and read once — so
+    ``traffic = args + outputs + 2 * temps``. ``traffic_ratio`` normalizes by
+    the unavoidable ``args + outputs``; a perfectly fused program scores ~1.0,
+    a program that round-trips an input-sized intermediate scores >= ~3.0.
+    Used by tests/test_kernels.py to pin the fused-decompress data-movement
+    claim and by benchmarks/bench_breakdown.py's measured-traffic column.
+
+    Caveat (documented, load-bearing for how the fused-compress claim is
+    pinned): under the Pallas *interpreter* a kernel becomes an XLA loop whose
+    carried operands double-buffer the kernel's full outputs, so temp bytes
+    overstate a megakernel's real HBM traffic by O(outputs). The compress-side
+    pin therefore uses :func:`materialized_shapes` (no code-stream-sized
+    buffer exists at all) instead of this byte model.
+    """
+    ma = compiled.memory_analysis()
+    args = int(ma.argument_size_in_bytes)
+    out = int(ma.output_size_in_bytes)
+    temp = int(ma.temp_size_in_bytes)
+    traffic = args + out + 2 * temp
+    return {"argument_bytes": args, "output_bytes": out, "temp_bytes": temp,
+            "traffic_bytes": traffic,
+            "traffic_ratio": traffic / max(args + out, 1)}
+
+
+def materialized_shapes(hlo_text: str, *, dtype: str = "u16",
+                        min_elems: int = 0) -> set[tuple[int, ...]]:
+    """Distinct ``dtype`` buffer shapes with >= ``min_elems`` elements in an
+    optimized-HLO dump. ``min_elems = padded stream length`` makes this a
+    direct mechanical check of the §3.5 fusion claim: a pipeline that
+    round-trips the u16 code (or shuffled-word) stream through HBM must
+    materialize a u16 buffer of at least that many elements somewhere."""
+    out: set[tuple[int, ...]] = set()
+    for m in re.finditer(rf"{re.escape(dtype)}\[([\d,]+)\]", hlo_text):
+        dims = tuple(int(d) for d in m.group(1).split(",") if d)
+        n = 1
+        for d in dims:
+            n *= d
+        if n >= min_elems:
+            out.add(dims)
+    return out
+
+
 @dataclasses.dataclass
 class Op:
     name: str

@@ -41,10 +41,12 @@ class KVCompressionConfig:
     eb_mode: str = "rel"           # "rel" (per-leaf range) | "abs"
     min_leaf_size: int = 65_536
     use_kernels: bool = False      # route FZ hot stages through Pallas kernels
+    kernel_mode: str = "fused"     # "fused" megakernels | "staged" oracle
 
     def fz_config(self) -> fz.FZConfig:
         return fz.FZConfig(eb=self.eb, eb_mode=self.eb_mode,
-                           exact_outliers=False, use_kernels=self.use_kernels)
+                           exact_outliers=False, use_kernels=self.use_kernels,
+                           kernel_mode=self.kernel_mode)
 
 
 def compress_cache(cache: dict, kcfg: KVCompressionConfig) -> dict:

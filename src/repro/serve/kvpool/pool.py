@@ -75,8 +75,16 @@ class PoolConfig:
     # route the hot paths through Pallas kernels (mirrors FZConfig): FZ
     # quant/shuffle stages AND page-native decode attention — the engine's
     # serve loop then decodes via gather_pages + kernels/flash_decode instead
-    # of materializing the contiguous cache (interpret mode off-TPU)
+    # of materializing the contiguous cache (interpret mode off-TPU).
+    # kernel_mode picks the FZ flavor: "fused" single-launch megakernels
+    # (default — page park/resume and transient cold reads each cost one
+    # kernel launch) or "staged" per-stage kernels (the second oracle). The
+    # vmapped batched dispatches below stay bit-identical to single-page
+    # under both modes (fused path pinned in tests/test_kvpool.py via
+    # use_kernels; the full three-way vmap pin is
+    # tests/test_fz_properties.py::test_three_way_shared_eb_vmap_seeded).
     use_kernels: bool = False
+    kernel_mode: str = "fused"
     exact_outliers: bool = False   # match serve.KVCompressionConfig default
     dtype: str = "bfloat16"
 
@@ -95,7 +103,8 @@ class PoolConfig:
         # through compress_with_eb with the pool's shared resolved bound.
         return fz.FZConfig(eb=self.eb, eb_mode="abs",
                            exact_outliers=self.exact_outliers,
-                           use_kernels=self.use_kernels)
+                           use_kernels=self.use_kernels,
+                           kernel_mode=self.kernel_mode)
 
 
 @dataclasses.dataclass

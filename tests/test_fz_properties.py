@@ -124,6 +124,60 @@ def check_monotone_ratio_in_eb(seed: int) -> None:
     assert crs[0] <= crs[1] * 1.01 and crs[1] <= crs[2] * 1.01, crs
 
 
+def _three_way_cfgs(code_mode: str, eb: float, eb_mode: str = "rel"):
+    base = dict(eb=eb, eb_mode=eb_mode, code_mode=code_mode,
+                exact_outliers=False)
+    return {"reference": fz.FZConfig(**base),
+            "staged": fz.FZConfig(**base, use_kernels=True,
+                                  kernel_mode="staged"),
+            "fused": fz.FZConfig(**base, use_kernels=True,
+                                 kernel_mode="fused")}
+
+
+def check_three_way_bit_identity(x: np.ndarray, eb: float,
+                                 code_mode: str = "sign_mag") -> None:
+    """fused == staged == reference: bitflags, payload, nnz AND roundtrip are
+    bit-identical across the three execution paths on the same data."""
+    data = jnp.asarray(x)
+    outs = {name: fz.roundtrip(data, cfg)
+            for name, cfg in _three_way_cfgs(code_mode, eb).items()}
+    rec0, c0 = outs["reference"]
+    for name in ("staged", "fused"):
+        rec, c = outs[name]
+        assert jnp.array_equal(c0.bitflags, c.bitflags), name
+        assert jnp.array_equal(c0.payload, c.payload), name
+        assert int(c0.nnz_blocks) == int(c.nnz_blocks), name
+        assert jnp.array_equal(rec0, rec), name
+
+
+def check_three_way_shared_eb_vmap(seed: int, page_shape, eb_abs: float,
+                                   code_mode: str = "sign_mag") -> None:
+    """compress_with_eb pages under vmap (the kvpool batched dispatch): all
+    three paths produce bit-identical stacked containers, and each path's
+    vmapped dispatch is bit-identical to its own single-page calls."""
+    rng = np.random.default_rng(seed)
+    pages = jnp.asarray(np.cumsum(
+        rng.standard_normal((3, *page_shape)), axis=-1).astype(np.float32))
+    eb = jnp.float32(eb_abs)
+    stacked = {}
+    for name, cfg in _three_way_cfgs(code_mode, 1.0, eb_mode="abs").items():
+        batched = jax.vmap(lambda d: fz.compress_with_eb(d, eb, cfg))(pages)
+        singles = [fz.compress_with_eb(pages[i], eb, cfg) for i in range(3)]
+        for i, s in enumerate(singles):
+            assert jnp.array_equal(batched.bitflags[i], s.bitflags), name
+            assert jnp.array_equal(batched.payload[i], s.payload), name
+        recs = jax.vmap(lambda c: fz.decompress(c, cfg))(batched)
+        for i, s in enumerate(singles):
+            assert jnp.array_equal(recs[i], fz.decompress(s, cfg)), name
+        stacked[name] = (batched, recs)
+    b0, r0 = stacked["reference"]
+    for name in ("staged", "fused"):
+        b, r = stacked[name]
+        assert jnp.array_equal(b0.bitflags, b.bitflags), name
+        assert jnp.array_equal(b0.payload, b.payload), name
+        assert jnp.array_equal(r0, r), name
+
+
 # ---------------------------------------------------------------------------
 # Tier 1: hypothesis-driven search (skipped wholesale when unavailable)
 # ---------------------------------------------------------------------------
@@ -183,6 +237,18 @@ if HAVE_HYPOTHESIS:
     @settings(**SET)
     def test_monotone_ratio_in_eb(seed):
         check_monotone_ratio_in_eb(seed)
+
+    @st.composite
+    def field_eb_mode(draw):
+        # three Pallas compiles per example: fewer, fatter cases
+        return (arrays(draw, max_elems=12_000),
+                draw(st.sampled_from([1e-2, 1e-3, 1e-4])),
+                draw(st.sampled_from(["sign_mag", "zigzag"])))
+
+    @given(field_eb_mode())
+    @settings(max_examples=10, deadline=None)
+    def test_three_way_bit_identity(case):
+        check_three_way_bit_identity(*case)
 
 
 def test_importorskip_guard():
@@ -245,6 +311,34 @@ def test_code_roundtrip_seeded(seed, mode):
 @pytest.mark.parametrize("seed", range(2))
 def test_monotone_ratio_in_eb_seeded(seed):
     check_monotone_ratio_in_eb(seed)
+
+
+# three-way fused == staged == reference: 1/2/3D, non-tile-multiple sizes,
+# both code modes (the full kernel_mode matrix of core/fz.py)
+_THREE_WAY_CASES = [
+    ("normal", (40,), 1e-3, "sign_mag"),          # sub-tile 1D
+    ("smooth", (10_001,), 1e-4, "sign_mag"),      # non-tile-multiple 1D
+    ("smooth", (10_001,), 1e-4, "zigzag"),
+    ("smooth", (17, 23), 1e-3, "sign_mag"),       # tiny odd 2D
+    ("smooth", (33, 1000), 1e-4, "zigzag"),       # tile-straddling rows
+    ("normal", (64, 64), 1e-2, "sign_mag"),       # exactly one tile
+    ("smooth", (16, 16, 16), 1e-3, "sign_mag"),   # 3D
+    ("normal", (5, 7, 11), 1e-2, "zigzag"),       # tiny odd 3D
+    ("zeros", (4096,), 1e-3, "sign_mag"),         # all-zero stream
+    ("constant", (7, 11), 1e-2, "sign_mag"),
+]
+
+
+@pytest.mark.parametrize("kind,dims,eb,code_mode", _THREE_WAY_CASES)
+def test_three_way_bit_identity_seeded(kind, dims, eb, code_mode):
+    check_three_way_bit_identity(make_array(0, kind, list(dims)), eb,
+                                 code_mode)
+
+
+@pytest.mark.parametrize("page_shape,code_mode",
+                         [((8192,), "sign_mag"), ((4, 2048), "zigzag")])
+def test_three_way_shared_eb_vmap_seeded(page_shape, code_mode):
+    check_three_way_shared_eb_vmap(11, page_shape, 0.01, code_mode)
 
 
 def test_paper_mode_matches_strict_when_no_outliers():
