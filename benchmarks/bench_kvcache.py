@@ -18,7 +18,15 @@ Cited from serve/engine.py. Three measurements:
 
 plus one paged-pool row: a continuous-batching trace over a slab smaller than
 its raw demand, reporting the memory high-water mark vs demand and the
-preempt/resume traffic (serve/kvpool).
+preempt/resume traffic (serve/kvpool);
+
+plus the serving section: one seeded prefix-skewed trace (tracegen — Poisson
+arrivals, template reuse) replayed through the pool in all three
+``prefix_mode`` s. "radix" shares refcounted pages, "copy" matches but
+duplicates (the numerics-parity twin), "off" is the non-shared baseline; the
+rows report prefill tokens issued vs saved, prefix-hit rate, CoW traffic,
+cold-decompress dispatch counts (dedup), high-water bytes, and p50/p99
+TTFT / inter-token latency — the radix-vs-off deltas CI pins.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ from repro.models import zoo
 from repro.serve import Engine, KVCompressionConfig, PoolConfig, Request
 from repro.serve.engine import (cache_bytes, compress_cache,
                                 compressed_cache_bytes, decompress_cache)
+from repro.serve.kvpool import TraceGenConfig, generate, latency_summary
 
 
 def parking_sweep(arch="glm4-9b", S=128, B=2, n_tokens=2, ebs=PAPER_EBS):
@@ -140,6 +149,57 @@ def pool_trace(arch="glm4-9b"):
              f"{stats.tiered_pages}tiered")]
 
 
+def serving_trace(arch="glm4-9b", smoke=False):
+    """One seeded prefix-skewed trace through radix / copy / off pools.
+
+    The slab (6 pages) is smaller than the trace's raw demand, so completion
+    leans on compress-parking in every mode; the radix rows additionally get
+    prefix hits, CoW forks and deduped shared cold reads. All three replays
+    see byte-identical requests and fully deterministic scheduling, so the
+    row fields are stable run-to-run (scripts/ci.sh asserts on them)."""
+    cfg = configs.get(arch, smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    tg = TraceGenConfig(
+        seed=7, n_requests=6 if smoke else 20, vocab=cfg.vocab,
+        arrival_rate=1.5, n_templates=1 if smoke else 2,
+        template_len=(16, 22), template_reuse=0.75, suffix_len=(2, 5),
+        n_new=(3, 6) if smoke else (4, 8), priorities=(0, 1),
+        ttft_slo=8, itl_slo=6)
+    reqs = generate(tg)
+    raw_demand = sum(-(-len(r.tokens) // 8) + -(-r.n_new // 8) for r in reqs)
+    rows = []
+    for mode in ("radix", "copy", "off"):
+        # the radix cache is LRU-capped so retained cold containers stay a
+        # bounded overhead against the high-water comparison with "off"
+        pool_cfg = PoolConfig(num_pages=6, page_size=8, seq_capacity=48,
+                              cold_after=2, eb=1e-4, prefix_mode=mode,
+                              max_cached_pages=6 if smoke else 8)
+        eng = Engine(model, params, pool=pool_cfg)
+        outputs, stats, pool = eng.serve(reqs, max_batch=3)
+        assert len(outputs) == len(reqs), f"{mode}: trace incomplete"
+        total_prompt = sum(len(r.tokens) for r in reqs)
+        assert (stats.prefill_tokens + stats.prefill_tokens_saved
+                == total_prompt), mode
+        rows.append({
+            "name": f"kvpool-serve[{mode}]", "mode": mode,
+            "requests": len(reqs), "raw_demand_pages": raw_demand,
+            "prefill_tokens": stats.prefill_tokens,
+            "prefill_tokens_saved": stats.prefill_tokens_saved,
+            "prefix_hit_rate": stats.prefix_hits / len(reqs),
+            "cow_promotions": stats.cow_promotions,
+            "decompressions": stats.pool_decompressions,
+            "decompress_dispatches": stats.decompress_dispatches,
+            "shared_cold_reads_deduped": stats.shared_cold_reads_deduped,
+            "high_water_bytes": int(stats.high_water_used_bytes),
+            "high_water_logical_bytes": int(stats.high_water_logical_bytes),
+            "preemptions": stats.preemptions,
+            "decode_steps": stats.decode_steps,
+            **latency_summary(stats, tg),
+        })
+    return rows
+
+
 def main(smoke: bool = False) -> dict:
     """Prints the tables; returns machine-readable rows (BENCH_ci.json).
 
@@ -148,7 +208,7 @@ def main(smoke: bool = False) -> dict:
     live while staying minutes-cheap on the runner.
     """
     park_kw = dict(S=64, B=1, n_tokens=1, ebs=(1e-3,)) if smoke else {}
-    out = {"parking": [], "decode_ms": [], "pool": []}
+    out = {"parking": [], "decode_ms": [], "pool": [], "serving": []}
     print("bench,ratio,park_ms,resume_ms,decode_logit_dev")
     for name, ratio, park_ms, resume_ms, dev in parking_sweep(**park_kw):
         print(f"{name},{ratio:.2f}x,{park_ms:.1f},{resume_ms:.1f},{dev:.2e}")
@@ -163,6 +223,16 @@ def main(smoke: bool = False) -> dict:
         print(f"{name},{hw},{demand},{traffic}")
         out["pool"].append({"name": name, "high_water_bytes": int(hw),
                             "raw_demand_bytes": int(demand), "traffic": traffic})
+    print("bench,prefill_tok,saved,hit_rate,cow,dispatches,deduped,"
+          "hw_bytes,ttft_p50/p99,itl_p50/p99")
+    for row in serving_trace(smoke=smoke):
+        print(f"{row['name']},{row['prefill_tokens']},"
+              f"{row['prefill_tokens_saved']},{row['prefix_hit_rate']:.2f},"
+              f"{row['cow_promotions']},{row['decompress_dispatches']},"
+              f"{row['shared_cold_reads_deduped']},{row['high_water_bytes']},"
+              f"{row['ttft_p50']:.0f}/{row['ttft_p99']:.0f},"
+              f"{row['itl_p50']:.0f}/{row['itl_p99']:.0f}")
+        out["serving"].append(row)
     return out
 
 

@@ -1,14 +1,18 @@
-"""Continuous-batching serving through the paged FZ KV pool (paper §2.4).
+"""Prefix-shared continuous batching through the paged FZ KV pool (§2.4).
 
-A synthetic trace with more concurrent sequences than the raw slab can hold:
-the pool completes it anyway because cold pages tier down to FZ-compressed
-containers (freeing their physical slots) and preempted sequences are
-compress-parked instead of recomputed. Every request's tokens are checked
-against the never-parked whole-cache oracle (``Engine.generate``).
+A seeded trace-driven load (tracegen): Poisson arrivals drawing from a
+template pool, so most requests share a long prompt prefix — the production
+shape the radix page table is built for. The pool completes a trace whose
+raw demand exceeds the slab because (a) matched prefixes are *mapped*, not
+re-prefilled (one physical page serves every reader; writes copy-on-write),
+(b) cold pages tier down to FZ-compressed containers, freeing their slots,
+and (c) preempted sequences are compress-parked instead of recomputed.
+Every request's tokens are checked against the never-parked whole-cache
+oracle (``Engine.generate``).
 
     PYTHONPATH=src python examples/serve_compressed_kv.py            # full
     PYTHONPATH=src python examples/serve_compressed_kv.py --smoke    # CI: tiny
-                                     # model, 2-page pool, 8-step trace
+                                     # model, 3-page pool, 4-request trace
     PYTHONPATH=src python examples/serve_compressed_kv.py --smoke --kernels
                                      # CI kernel-parity smoke: same trace
                                      # through the Pallas flash-decode kernel
@@ -23,71 +27,98 @@ import numpy as np
 
 from repro import configs
 from repro.models import zoo
-from repro.serve import Engine, PoolConfig, Request
+from repro.serve import Engine, PoolConfig
+from repro.serve.kvpool import TraceGenConfig, generate, latency_summary
 
 
 def build(smoke: bool, kernels: bool = False):
     if smoke:
         cfg = configs.get("glm4-9b", smoke=True)
-        pool = PoolConfig(num_pages=2, page_size=8, seq_capacity=32,
+        pool = PoolConfig(num_pages=3, page_size=8, seq_capacity=32,
                           cold_after=1, eb=1e-4, use_kernels=kernels)
-        trace = dict(n_reqs=2, prompt_lens=(8, 8), n_new=8, max_batch=2)
+        tg = TraceGenConfig(seed=1, n_requests=4, vocab=cfg.vocab,
+                            arrival_rate=2.0, n_templates=1,
+                            template_len=(12, 12), template_reuse=0.9,
+                            suffix_len=(2, 4), n_new=(4, 6),
+                            priorities=(0, 1), ttft_slo=6, itl_slo=4)
+        max_batch = 2
     else:
         cfg = dataclasses.replace(
             configs.get("glm4-9b"),
             arch_id="glm4-mini", n_layers=4, d_model=256, n_heads=8,
             n_kv_heads=2, d_ff=704, vocab=4096, head_dim=32)
-        # page-aligned prompts make several lanes open a fresh page on the
-        # same step, overflowing the 5-slot slab -> compress-park preemption
-        pool = PoolConfig(num_pages=5, page_size=16, seq_capacity=128,
-                          cold_after=2, eb=1e-4, use_kernels=kernels)
-        trace = dict(n_reqs=6, prompt_lens=(48, 32, 48, 32, 32, 16),
-                     n_new=12, max_batch=3)
-    return cfg, pool, trace
+        # 4 slots against ~37 pages of raw demand: tight enough that running
+        # tails protect most of the slab, so admission pressure has to
+        # compress-park victims, not just tier cold pages
+        pool = PoolConfig(num_pages=4, page_size=16, seq_capacity=128,
+                          cold_after=2, eb=1e-4, use_kernels=kernels,
+                          max_cached_pages=6)
+        tg = TraceGenConfig(seed=4, n_requests=8, vocab=cfg.vocab,
+                            arrival_rate=1.0, n_templates=2,
+                            template_len=(32, 48), template_reuse=0.75,
+                            suffix_len=(4, 8), n_new=(8, 12),
+                            priorities=(0, 1), ttft_slo=10, itl_slo=6)
+        max_batch = 3
+    return cfg, pool, tg, max_batch
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny model, 2-page pool, 8-step trace (CI)")
+                    help="tiny model, 3-page pool, 4-request trace (CI)")
     ap.add_argument("--kernels", action="store_true",
                     help="route decode through the Pallas flash-decode kernel "
                          "(page-native gather) and FZ through the kernel "
                          "stages — interpret mode off-TPU")
     args = ap.parse_args()
 
-    cfg, pool_cfg, trace = build(args.smoke, args.kernels)
+    cfg, pool_cfg, tg, max_batch = build(args.smoke, args.kernels)
     model = zoo.build(cfg)
     params = model.init(jax.random.key(0))
     mode = "pallas-kernel paged decode" if args.kernels else "reference decode"
     print(f"decode path: {mode}")
     print(f"serving {cfg.arch_id}: {model.param_count() / 1e6:.1f}M params, "
-          f"pool {pool_cfg.num_pages} pages x {pool_cfg.page_size} tokens")
+          f"pool {pool_cfg.num_pages} pages x {pool_cfg.page_size} tokens, "
+          f"prefix_mode={pool_cfg.prefix_mode}")
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(req_id=i,
-                    tokens=rng.integers(0, cfg.vocab, (s,), dtype=np.int32),
-                    n_new=trace["n_new"], priority=i % 2)
-            for i, s in enumerate(trace["prompt_lens"])]
+    reqs = generate(tg)
     pages_demanded = sum(-(-len(r.tokens) // pool_cfg.page_size) +
                          -(-r.n_new // pool_cfg.page_size) for r in reqs)
-    print(f"trace demands ~{pages_demanded} pages raw; slab holds "
-          f"{pool_cfg.num_pages} — completion requires compressed parking")
+    prompt_tokens = sum(len(r.tokens) for r in reqs)
+    print(f"trace: {len(reqs)} requests / {prompt_tokens} prompt tokens from "
+          f"{tg.n_templates} template(s) at {tg.template_reuse:.0%} reuse, "
+          f"Poisson rate {tg.arrival_rate}/step; demands ~{pages_demanded} "
+          f"pages raw vs a {pool_cfg.num_pages}-slot slab")
 
     eng = Engine(model, params, pool=pool_cfg)
-    outputs, stats, pool = eng.serve(reqs, max_batch=trace["max_batch"])
+    outputs, stats, pool = eng.serve(reqs, max_batch=max_batch)
     assert len(outputs) == len(reqs), "trace did not complete"
     assert stats.preemptions >= 1, "trace never exercised compress-parking"
+    assert stats.prefix_hits >= 2, "trace never exercised prefix sharing"
+    assert stats.cow_promotions >= 1, "trace never exercised copy-on-write"
 
     slab = pool_cfg.num_pages * pool.slot_bytes
     print(f"\ncompleted {stats.completed} requests in {stats.decode_steps} "
           f"decode steps: {stats.admissions} admissions, "
           f"{stats.preemptions} preemptions (compress-park), "
           f"{stats.resumes} resumes, {stats.tiered_pages} pages tiered cold")
+    print(f"prefix sharing: {stats.prefix_hits}/{stats.admissions} admissions "
+          f"hit the radix cache; {stats.prefill_tokens} prompt tokens "
+          f"prefilled, {stats.prefill_tokens_saved} served from shared pages; "
+          f"{stats.cow_promotions} copy-on-write forks, "
+          f"{stats.shared_cold_reads_deduped} shared cold reads deduped "
+          f"({stats.pool_decompressions} decompressions in "
+          f"{stats.decompress_dispatches} batched dispatches)")
+    lat = latency_summary(stats, tg)
+    print(f"latency (steps): ttft p50/p99 {lat['ttft_p50']:.0f}/"
+          f"{lat['ttft_p99']:.1f}, itl p50/p99 {lat['itl_p50']:.0f}/"
+          f"{lat['itl_p99']:.1f}; SLO attainment ttft "
+          f"{lat['ttft_slo_attained']:.0%}, itl {lat['itl_slo_attained']:.0%}")
     print(f"pool memory high-water: {stats.high_water_used_bytes / 1e3:.1f} KB "
           f"(raw slab in use + compressed payloads) vs "
-          f"{stats.high_water_demand_bytes / 1e3:.1f} KB had all live pages "
-          f"stayed raw ({stats.high_water_demand_bytes / max(stats.high_water_used_bytes, 1):.2f}x)"
+          f"{stats.high_water_logical_bytes / 1e3:.1f} KB had every reader "
+          f"held private raw pages "
+          f"({stats.high_water_logical_bytes / max(stats.high_water_used_bytes, 1):.2f}x)"
           f"; preallocated slab {slab / 1e3:.1f} KB")
 
     # parity vs. the never-parked whole-cache oracle
@@ -96,11 +127,11 @@ def main():
         oracle, _ = eng.generate({"tokens": jnp.asarray(r.tokens)[None]}, r.n_new)
         agrees.append(float((np.asarray(oracle[0]) == outputs[r.req_id]).mean()))
     mean_agree = float(np.mean(agrees))
-    print(f"decode-token agreement, pooled (parked) vs never-parked oracle "
-          f"at eb={pool_cfg.eb:g}: {mean_agree * 100:.1f}% "
+    print(f"decode-token agreement, pooled (shared + parked) vs never-parked "
+          f"oracle at eb={pool_cfg.eb:g}: {mean_agree * 100:.1f}% "
           f"(per request: {[f'{a:.2f}' for a in agrees]})")
     print("sample continuation (pooled):", outputs[reqs[0].req_id][:10])
-    assert mean_agree >= 0.9, f"parked decode diverged from oracle: {agrees}"
+    assert mean_agree >= 0.9, f"shared decode diverged from oracle: {agrees}"
 
 
 if __name__ == "__main__":

@@ -20,10 +20,12 @@ case "$tier" in
       || pip install --quiet hypothesis 2>/dev/null \
       || echo "hypothesis wheel unavailable; property tier uses the bundled fallback"
     python -m pytest -q -m "not slow"
-    # kvpool smoke: tiny model, 2-page pool, 8-step trace — drives the full
-    # continuous-batching scheduler (admit/tier/preempt/resume) on every PR
+    # kvpool smoke: tiny model, 3-page pool, seeded template-sharing trace —
+    # drives the full continuous-batching scheduler (admit/tier/preempt/
+    # resume) AND the prefix-sharing path (radix hits, suffix prefill, CoW,
+    # deduped shared cold reads) on every PR; asserts hits/CoW/preemptions
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke
-    # kernel-parity smoke: the same 2-page-pool trace end-to-end through the
+    # kernel-parity smoke: the same trace end-to-end through the
     # interpret-mode Pallas flash-decode kernel (page-native gather) + FZ
     # kernel stages; asserts >= 90% token agreement with the oracle
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke --kernels
@@ -53,8 +55,29 @@ for d in ("compress", "decompress"):
             ("reference", "staged", "fused"))
     assert n >= 6, f"too few {d} throughput rows: {n}"
 assert all(r["gbps"] > 0 and r["ratio"] > 0 for r in trows), "bad rows"
+# serving rows: the seeded prefix-skewed trace through all three pool
+# storage modes, with the radix-vs-off wins the PR trajectory tracks
+srows = doc["sections"]["kvcache"]["serving"]
+by_mode = {r["mode"]: r for r in srows}
+assert {"radix", "copy", "off"} <= set(by_mode), f"missing modes: {set(by_mode)}"
+radix, copy, off = by_mode["radix"], by_mode["copy"], by_mode["off"]
+assert off["prefill_tokens"] >= 2 * radix["prefill_tokens"], \
+    f"radix prefill win < 2x: {radix['prefill_tokens']} vs {off['prefill_tokens']}"
+assert radix["prefill_tokens"] == copy["prefill_tokens"], "radix/copy matching diverged"
+assert radix["high_water_bytes"] <= off["high_water_bytes"], \
+    f"radix high-water regressed: {radix['high_water_bytes']} vs {off['high_water_bytes']}"
+assert radix["shared_cold_reads_deduped"] > 0, "dedup path never exercised"
+assert radix["decompressions"] < copy["decompressions"], \
+    "dedup did not reduce cold decodes vs private copies"
+for r in srows:
+    for f in ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
+              "ttft_slo_attained", "itl_slo_attained"):
+        assert f in r, f"serving row {r['mode']} missing {f}"
 print(f"BENCH_ci.json OK: sections={sorted(doc['sections'])}, "
-      f"{len(rows)} overlap rows, {len(trows)} compressor rows")
+      f"{len(rows)} overlap rows, {len(trows)} compressor rows, "
+      f"{len(srows)} serving rows "
+      f"(radix {radix['prefill_tokens']} vs off {off['prefill_tokens']} "
+      f"prefill tokens)")
 PY
     ;;
   all)  exec python -m pytest -q ;;

@@ -169,6 +169,35 @@ def attention_reference(q, k, v, *, causal=True):
     return o.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def prefix_attention(q: jax.Array, k_pre: jax.Array, v_pre: jax.Array,
+                     prefix_len: jax.Array, k_suf: jax.Array,
+                     v_suf: jax.Array) -> jax.Array:
+    """Suffix-prefill attention against a cached prefix (prefix sharing).
+
+    q: (B, Sq, H, D) — queries for the *suffix* tokens, already RoPE'd at
+    their absolute positions ``prefix_len + i``; k_pre/v_pre:
+    (B, Sk, KVH, D) — the gathered prefix KV cache, valid below
+    ``prefix_len`` (B,); k_suf/v_suf: (B, Sq, KVH, D) — the suffix's own
+    fresh K/V. One softmax over [masked prefix | causal suffix]. Suffixes
+    are a page bucket long, so the naive masked O(Sq*(Sk+Sq)) f32 form is
+    the right tool — no chunking.
+    """
+    B, Sq, H, D = q.shape
+    KVH = k_suf.shape[2]
+    G = H // KVH
+    qf = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32) * D ** -0.5
+    s_pre = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k_pre.astype(jnp.float32))
+    pre_valid = jnp.arange(k_pre.shape[1])[None, :] < prefix_len[:, None]
+    s_pre = jnp.where(pre_valid[:, None, None, None, :], s_pre, NEG_INF)
+    s_suf = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k_suf.astype(jnp.float32))
+    causal = jnp.arange(Sq)[:, None] >= jnp.arange(Sq)[None, :]
+    s_suf = jnp.where(causal[None, :, None, None, :], s_suf, NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([s_pre, s_suf], axis=-1), axis=-1)
+    vcat = jnp.concatenate([v_pre, v_suf], axis=1).astype(jnp.float32)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, vcat)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Decode attention (single new token vs. KV cache)
 # ---------------------------------------------------------------------------

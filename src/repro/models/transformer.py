@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from . import moe as moe_mod
 from . import nn
-from .attention import apply_mrope, apply_rope, decode_attention, flash_attention
+from .attention import (apply_mrope, apply_rope, decode_attention,
+                        flash_attention, prefix_attention)
 
 DP = "fsdp"
 TP = "tp"
@@ -216,6 +217,58 @@ def forward_prefill(params: dict, cfg: ArchConfig, batch: dict):
     logits = nn.dense(x, params["unembed"])
     cache = {"k": ks, "v": vs, "length": lengths}
     return logits, cache
+
+
+def forward_prefill_suffix(params: dict, cfg: ArchConfig, prefix: dict,
+                           batch: dict):
+    """Prefill only a prompt *suffix* against cached prefix K/V (the
+    prefix-sharing admission path in serve/kvpool).
+
+    prefix: ``{"k": (L, B, Sk, KVH, hd), "v": ..., "length": (B,)}`` — a
+    gathered KV view valid below ``length`` (absolute positions 0..length);
+    batch: ``tokens`` (B, Ssuf) right-padded suffix, ``lengths`` (B,) true
+    suffix lengths. Suffix queries are RoPE'd at their absolute positions
+    ``prefix_len + i`` — sharing is only valid for position-aligned
+    prefixes, which is exactly what the radix index guarantees.
+
+    Returns (last-true-position logits, cache with the *suffix's own* K/V
+    (L, B, Ssuf, KVH, hd) and total length prefix+suffix) — the pool writes
+    the suffix K/V into pages; the prefix pages already exist. Padded
+    positions write K/V but never influence true positions (prefix keys are
+    length-masked, suffix keys causally behind them).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = nn.shard_act(nn.embed_lookup(tokens, params["embed"]), ("dp", None, None))
+    prefix_len = prefix["length"].astype(jnp.int32)
+    pos = prefix_len[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, per_layer):
+        lp, kc, vc = per_layer                     # kc/vc: (B, Sk, KVH, hd)
+        Bq, Sq, _ = x.shape
+        x = nn.shard_act(x, ("dp", None, None))
+        h = nn.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(lp, h, cfg, pos)
+        o = prefix_attention(q, kc, vc, prefix_len, k, v)
+        x = x + nn.dense(o.reshape(Bq, Sq, -1), lp["wo"])
+        h = nn.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        f, _ = _ffn(lp, h, cfg)
+        out = nn.shard_act(x + f, ("dp", None, None))
+        return out, (nn.shard_act(k.astype(jnp.bfloat16),
+                                  ("dp", "tp", None, None)),
+                     nn.shard_act(v.astype(jnp.bfloat16),
+                                  ("dp", "tp", None, None)))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x,
+                               (params["layers"], prefix["k"], prefix["v"]))
+    lengths = batch["lengths"].astype(jnp.int32)
+    idx = (lengths - 1)[:, None, None]
+    x_last = jnp.take_along_axis(x, jnp.broadcast_to(idx, (B, 1, x.shape[-1])),
+                                 axis=1)[:, 0]
+    x = nn.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = nn.dense(x, params["unembed"])
+    return logits, {"k": ks, "v": vs, "length": prefix_len + lengths}
 
 
 def forward_decode(params: dict, cfg: ArchConfig, cache: dict, token: jax.Array,

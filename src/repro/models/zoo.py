@@ -38,6 +38,9 @@ class Model:
     # page-native decode over the serve/kvpool layout (transformer families
     # with plain k/v/length caches only; None elsewhere)
     decode_paged: Callable[..., Any] | None = None
+    # suffix prefill against cached prefix K/V (the kvpool prefix-sharing
+    # admission path); same family gate as decode_paged
+    prefill_suffix: Callable[..., Any] | None = None
 
     def init(self, key: jax.Array) -> dict:
         return nn.init_tree(self.defs(), key)
@@ -153,10 +156,14 @@ def build(cfg: ArchConfig) -> Model:
         raise ValueError(f"unknown family {fam!r}")
 
     decode_paged = None
+    prefill_suffix = None
     if fam in ("dense", "moe") or (fam == "vlm" and cfg.mrope_sections is None):
         decode_paged = (lambda params, pages, token, use_kernels=False:
                         transformer.forward_decode_paged(
                             params, cfg, pages, token, use_kernels=use_kernels))
+        prefill_suffix = (lambda params, prefix, batch:
+                          transformer.forward_prefill_suffix(params, cfg,
+                                                             prefix, batch))
 
     return Model(
         cfg=cfg,
@@ -167,4 +174,5 @@ def build(cfg: ArchConfig) -> Model:
             mod.forward_decode(params, cfg, cache, token, positions),
         make_cache=make_cache,
         decode_paged=decode_paged,
+        prefill_suffix=prefill_suffix,
     )

@@ -106,6 +106,17 @@ class Engine:
         # (the old prefill bug) would retrace on every request
         self._decode = jax.jit(lambda p, c, t: model.decode(p, c, t))
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b))
+        # suffix prefill for the kvpool prefix-sharing admission path; the
+        # scheduler probes `callable(engine.prefill_suffix)`, so families
+        # without it leave the attribute None and sharing degrades to full
+        # prefill. One trace per (prefix width, suffix bucket) pair.
+        self.prefill_suffix = None
+        if model.prefill_suffix is not None:
+            self._prefill_suffix = jax.jit(
+                lambda p, prefix, b: model.prefill_suffix(p, prefix, b))
+            self.prefill_suffix = (
+                lambda prefix, batch:
+                self._prefill_suffix(self.params, prefix, batch))
         self._decode_paged = None
         if pool is not None and model.decode_paged is not None:
             uk = pool.use_kernels          # static: one trace per knob value

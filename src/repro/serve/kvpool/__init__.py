@@ -1,19 +1,49 @@
-"""repro.serve.kvpool — paged, FZ-compressed KV-cache pool.
+"""repro.serve.kvpool — paged, prefix-shared, FZ-compressed KV-cache pool.
 
 The subsystem that turns the compressor into serving capacity (paper §2.4,
-"in-memory compression"): KV state lives as fixed-size token pages in a
-preallocated device slab, hot pages raw, cold pages FZ-compressed in place,
-and a continuous-batching scheduler whose preemption path is compress-park
-rather than drop-and-recompute.
+"in-memory compression"), twice over: KV state lives as fixed-size token
+pages in a preallocated device slab, cold pages FZ-compressed in place
+(compression multiplier), and pages holding shared prompt prefixes are
+*refcounted* and mapped into every reader at once (dedup multiplier).
+
+Page states and refcount rules (pool.py holds the full contract):
+
+  * a physical page is ``raw`` (backed by a slab slot) or ``compressed``
+    (a fixed-shape FZ container, no slot); slots not backing a page are
+    ``free`` — the three states partition the slab at all times;
+  * ``Page.refs`` counts sequence mappings plus the radix tree's reference;
+    a page with refs > 1 is immutable — any write (suffix prefill into a
+    partially-matched tail, decode append to a tree-cached tail) first
+    forks a private copy of just that page (copy-on-write);
+  * the physical page is released when its last reference drops; the radix
+    cache's references are dropped explicitly at end-of-trace drain.
+
+Admission walks a radix tree over prompt token IDs (radix.py): the longest
+position-aligned cached prefix maps onto existing pages — raw or
+compressed, reads are tier-transparent — and only the unmatched suffix is
+prefilled (``engine.prefill_suffix`` attends to the cached prefix K/V).
+``PoolConfig.prefix_mode`` selects "radix" (shared pages), "copy" (same
+matching, private page copies — the bit-parity twin), or "off" (the
+non-shared pool).
+
+The dedup read path: ``gather``/``gather_pages`` deduplicate cold page IDs
+across all decode lanes before the single vmapped FZ decode, so a shared
+cold container is decompressed at most once per scheduler step and fanned
+out to every reader lane.
 
 Modules:
-  * ``pool``      — block allocator + page table (:class:`PagePool`), page
-                    states raw|compressed|free, capacity accounting on
-                    ``used_bytes()`` / ``wire_bytes()``;
+  * ``pool``      — refcounted block allocator + page table
+                    (:class:`PagePool`), CoW, dedup reads, byte accounting
+                    that counts shared physical state once;
+  * ``radix``     — the prefix tree (:class:`RadixIndex`), LRU eviction;
   * ``policy``    — tiering (cold-after-N), forced reclaim, victim selection
-                    (:class:`TieredPolicy`);
-  * ``scheduler`` — :class:`ContinuousBatcher`: admit / step / preempt /
-                    resume over a request trace;
+                    (:class:`TieredPolicy`), all deterministically ordered;
+  * ``scheduler`` — :class:`ContinuousBatcher`: timed admission
+                    (``Request.arrive_at``), suffix-prefill on prefix hits,
+                    preempt/resume, per-request TTFT/ITL tracking;
+  * ``tracegen``  — seeded Poisson/template load generator
+                    (:func:`generate`) + SLO/percentile reporting
+                    (:func:`latency_summary`);
   * ``attention`` — page-native decode attention built on the same
                     flash-decoding partials as ``dist.flash_decode``; with
                     ``use_kernels`` it runs the Pallas KV-tile kernel
@@ -23,9 +53,13 @@ Modules:
 The whole-cache park/resume in ``serve.engine`` (compress_cache /
 decompress_cache) is retained as the parity oracle: at a shared absolute
 error bound, page-granular park -> resume is bit-identical to the
-whole-cache roundtrip (tests/test_kvpool.py).
+whole-cache roundtrip, and the "copy" pool is bit-identical to "radix" on
+any trace (tests/test_kvpool.py, tests/test_kvpool_radix.py).
 """
 from .attention import paged_decode_attention, pages_from_cache  # noqa: F401
 from .policy import TieredPolicy  # noqa: F401
-from .pool import COMPRESSED, FREE, RAW, Page, PagePool, PoolConfig, PoolStats  # noqa: F401
+from .pool import (COMPRESSED, FREE, RAW, Page, PagePool, PoolConfig,  # noqa: F401
+                   PoolStats)
+from .radix import PrefixMatch, RadixIndex  # noqa: F401
 from .scheduler import ContinuousBatcher, Request, SeqRecord, TraceStats  # noqa: F401
+from .tracegen import TraceGenConfig, generate, latency_summary  # noqa: F401

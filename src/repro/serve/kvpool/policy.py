@@ -14,7 +14,12 @@ scheduler loop (scheduler.py) so they can be swapped/tuned independently:
   * ``victim``  — preemption: when reclaim cannot free enough (everything
                   cold is already compressed), the scheduler parks the
                   lowest-priority running sequence; ties break toward the
-                  latest arrival so older work finishes first.
+                  latest arrival so older work finishes first, then toward
+                  the highest seq id so equal-priority equal-arrival traces
+                  are deterministic run-to-run.
+
+All tie-breaks here are total orders (priority, arrival/write recency, then
+a stable id) — trace-driven benchmarks must reproduce exactly.
 
 Parking a sequence (``park``) is compress-park, not drop-and-recompute: every
 raw page it holds is compressed in place and its slots returned to the free
@@ -55,19 +60,21 @@ class TieredPolicy:
         candidates = sorted(
             (p for p in pool.pages.values()
              if p.slot is not None and p.page_id not in protect),
-            key=lambda p: p.last_write)
+            key=lambda p: (p.last_write, p.page_id))
         pool.compress_pages([p.page_id for p in candidates[:need]])
         return pool.n_free_slots() >= n
 
     @staticmethod
     def victim(running: dict[int, tuple[int, int]]) -> int | None:
-        """Pick the sequence to preempt: lowest priority, then latest arrival.
+        """Pick the sequence to preempt: lowest priority, then latest
+        arrival, then highest seq id (a total order — equal-priority
+        equal-arrival traces preempt deterministically).
 
         ``running`` maps seq id -> (priority, arrival_step).
         """
         if not running:
             return None
-        return min(running, key=lambda s: (running[s][0], -running[s][1]))
+        return min(running, key=lambda s: (running[s][0], -running[s][1], -s))
 
     @staticmethod
     def park(pool: PagePool, seq: int) -> int:

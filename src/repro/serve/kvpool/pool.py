@@ -1,12 +1,14 @@
-"""Paged KV-cache pool: block allocator + page table + FZ compression tiers.
+"""Paged KV-cache pool: refcounted block allocator, radix prefix sharing,
+copy-on-write pages, and FZ compression tiers.
 
 The device-resident half of the kvpool subsystem. A ``PagePool`` owns one
 preallocated slab of physical page slots
 
     slots : (num_pages, 2, L, page_size, KVH, hd)     # [k|v] x layers x tokens
 
-and a host-side page table mapping each sequence to a list of logical pages.
-Every logical page is in exactly one of two states:
+a host-side page table, and (when prefix sharing is on) a
+:class:`repro.serve.kvpool.radix.RadixIndex` over prompt token IDs. Every
+physical page is in exactly one of two states:
 
   * ``raw``        — backed by a physical slot in the slab (hot tier);
   * ``compressed`` — held as a fixed-shape :class:`repro.core.fz.FZCompressed`
@@ -15,31 +17,52 @@ Every logical page is in exactly one of two states:
 
 Physical slots not backing any page are ``free``. Compressing a page frees
 its slot — that is the capacity mechanism: a pool of N raw slots can hold far
-more than N pages' worth of live KV state, which is exactly the paper's §2.4
-in-memory-compression pitch (FZ is fast enough to (de)compress device-resident
-state at serving latency, so cold pages are *storage*, not tombstones).
+more than N pages' worth of live KV state (paper §2.4 — FZ is fast enough to
+(de)compress device-resident state at serving latency, so cold pages are
+*storage*, not tombstones).
 
-Error-bound discipline: all pages compress against one shared absolute bound
-(``fz.compress_with_eb``), resolved once from the first KV data the pool sees
-(or taken verbatim in ``eb_mode="abs"``). A shared bound makes the
-reconstruction grid ``round(x / 2eb) * 2eb`` independent of page chunking, so
-park -> resume through pages is bit-identical to a whole-cache
-``serve.engine.compress_cache`` / ``decompress_cache`` roundtrip at the same
-bound (pinned in tests/test_kvpool.py) — and every page shares a single jit
-trace because the bound is traced, not baked into the static config.
+Sharing multiplies capacity a second time. Pages carry a refcount = number
+of sequence mappings + (0|1) radix-tree reference; one physical page (or one
+compressed container) can back the same prefix in many sequences at once:
 
-Dispatch batching: same-shaped pages tier down / decompress through one
-vmapped FZ dispatch (``compress_pages`` / the batched cold-read inside
-``gather``) instead of one Python-loop dispatch per page; single-page results
-are bit-identical (pinned in tests/test_kvpool.py). Byte accounting is
-charged against the slab dtype: a container built from a bfloat16 page
-reports ``raw_bytes() == n * 2``, so ``compression_ratio()`` and ``PoolStats``
-never inflate by the internal float32 cast.
+  * admission walks the radix tree (``match_prefix``) and maps the matched
+    prefix onto existing pages (``map_prefix``) instead of re-prefilling —
+    raw or compressed, it does not matter, reads are tier-transparent;
+  * pages are append-only and reads are masked by each reader's own valid
+    length, so a shared page is safe to read below the reader's matched
+    length no matter what else it holds;
+  * any *write* to a page with refs > 1 first promotes a private copy of
+    just that page (copy-on-write: ``_cow_page``). Shared pages are
+    therefore immutable — two triggers exist: admission writing a suffix
+    into a partially-matched tail page, and a sequence appending a decode
+    token into a page the radix tree also references;
+  * ``free_seq`` and tree eviction only drop references; the physical page
+    (slot or container) is released when the last reference goes.
 
-Reads come in two shapes: ``gather`` materializes the contiguous fixed-width
-(L, B, seq_capacity, KVH, hd) cache for the model's reference decode, and
-``gather_pages`` keeps the (L, B, P, ps, KVH, hd) page layout that the Pallas
-flash-decode kernel (kernels/flash_decode) consumes directly.
+Error-bound discipline is unchanged from the non-shared pool: all pages
+compress against one shared absolute bound (``fz.compress_with_eb``), so
+park -> resume through pages is bit-identical to the whole-cache oracle at
+the same bound, and a shared container decodes to the same values for every
+reader.
+
+Dispatch batching + the dedup read path: same-shaped pages tier down /
+decompress through one vmapped FZ dispatch. The per-step read path
+(``gather`` / ``gather_pages``) first dedups cold page IDs across *all*
+lanes — a cold container shared by many readers is decoded exactly once per
+scheduler step and the reconstruction fanned out to every lane
+(``PoolStats.shared_cold_reads_deduped`` counts the decodes this avoids).
+
+Byte accounting counts physical state once, however many sequences map it:
+``used_bytes`` is raw-slab-in-use plus each distinct container's payload;
+``logical_demand_bytes`` is what the live page-table *mappings* would cost
+held raw and private, so ``compression_ratio()`` reports the honest
+dedup x compression capacity multiplier.
+
+``PoolConfig.prefix_mode`` selects the storage discipline — ``"radix"``
+(shared refcounted pages, the production path), ``"copy"`` (same radix
+matching and suffix prefill, but matched pages are *copied* into private
+slots: the bit-parity twin that isolates what sharing changes — nothing,
+numerically), or ``"off"`` (the PR-2 pool: no tree, full prefill always).
 """
 from __future__ import annotations
 
@@ -52,9 +75,13 @@ import jax.numpy as jnp
 
 from repro.core import fz
 
+from .radix import EMPTY_MATCH, PrefixMatch, RadixIndex
+
 FREE = "free"
 RAW = "raw"
 COMPRESSED = "compressed"
+
+PREFIX_MODES = ("radix", "copy", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,26 +104,39 @@ class PoolConfig:
     # serve loop then decodes via gather_pages + kernels/flash_decode instead
     # of materializing the contiguous cache (interpret mode off-TPU).
     # kernel_mode picks the FZ flavor: "fused" single-launch megakernels
-    # (default — page park/resume and transient cold reads each cost one
-    # kernel launch) or "staged" per-stage kernels (the second oracle). The
-    # vmapped batched dispatches below stay bit-identical to single-page
-    # under both modes (fused path pinned in tests/test_kvpool.py via
-    # use_kernels; the full three-way vmap pin is
-    # tests/test_fz_properties.py::test_three_way_shared_eb_vmap_seeded).
+    # (default) or "staged" per-stage kernels (the second oracle); batched
+    # vmapped dispatches stay bit-identical to single-page under both.
     use_kernels: bool = False
     kernel_mode: str = "fused"
     exact_outliers: bool = False   # match serve.KVCompressionConfig default
     dtype: str = "bfloat16"
+    # prefix sharing: "radix" shares refcounted pages (CoW on write),
+    # "copy" matches but duplicates pages (storage-parity baseline),
+    # "off" disables matching entirely (the PR-2 pool).
+    prefix_mode: str = "radix"
+    # matches shorter than this many tokens are ignored (None -> page_size;
+    # filters accidental sub-page token collisions on small vocabularies)
+    min_match_tokens: int | None = None
+    # radix-cached pages kept past their readers (None = unbounded; the
+    # scheduler releases the whole cache at end-of-trace drain)
+    max_cached_pages: int | None = None
 
     def __post_init__(self):
         if self.seq_capacity % self.page_size:
             raise ValueError("seq_capacity must be a multiple of page_size")
         if self.num_pages < 2:
             raise ValueError("need at least 2 physical pages")
+        if self.prefix_mode not in PREFIX_MODES:
+            raise ValueError(f"prefix_mode must be one of {PREFIX_MODES}")
 
     @property
     def max_pages_per_seq(self) -> int:
         return self.seq_capacity // self.page_size
+
+    @property
+    def min_match(self) -> int:
+        return (self.page_size if self.min_match_tokens is None
+                else self.min_match_tokens)
 
     def fz_config(self) -> fz.FZConfig:
         # eb/eb_mode here are only a fallback identity; page compression goes
@@ -109,12 +149,14 @@ class PoolConfig:
 
 @dataclasses.dataclass
 class Page:
-    """Page-table entry (host side)."""
+    """Physical page (host-side table entry). ``refs`` counts sequence
+    mappings plus the radix tree's reference (0 or 1); the page is released
+    when it reaches zero. Shared pages (refs > 1) are immutable — writers
+    go through copy-on-write."""
     page_id: int
-    seq: int
-    index: int                     # page index within its sequence
     slot: int | None = None        # physical slot when raw
     comp: fz.FZCompressed | None = None
+    refs: int = 1
     last_write: int = 0            # scheduler step of the last write
 
     @property
@@ -125,10 +167,16 @@ class Page:
 @dataclasses.dataclass
 class PoolStats:
     compressions: int = 0
-    decompressions: int = 0        # transient cold reads + promotions
+    decompressions: int = 0        # containers actually decoded
+    decompress_dispatches: int = 0  # vmapped decode dispatches issued
+    cow_promotions: int = 0        # shared-page writes that forked a copy
+    prefix_hit_pages: int = 0      # pages mapped from the radix cache
+    prefix_hit_tokens: int = 0     # tokens those mappings covered
+    shared_cold_reads_deduped: int = 0  # per-step cold decodes avoided by dedup
     high_water_slots: int = 0      # max physical slots simultaneously raw
     high_water_bytes: int = 0      # max raw-slab-in-use + compressed used_bytes
-    high_water_demand_bytes: int = 0  # max live pages held fully raw
+    high_water_demand_bytes: int = 0   # max live physical pages held fully raw
+    high_water_logical_bytes: int = 0  # max per-seq mappings held raw + private
 
 
 # ---------------------------------------------------------------------------
@@ -146,10 +194,23 @@ def _set_slot(slots, slot, page):
 
 
 @jax.jit
+def _copy_slot(slots, dst, src):
+    return slots.at[dst].set(slots[src])
+
+
+@jax.jit
 def _set_token(slots, slot, off, k_vec, v_vec):
     """Write one token's K/V (each (L, KVH, hd)) into a page at ``off``."""
     slots = slots.at[slot, 0, :, off].set(k_vec.astype(slots.dtype))
     return slots.at[slot, 1, :, off].set(v_vec.astype(slots.dtype))
+
+
+@partial(jax.jit, static_argnames=("off",))
+def _write_span(slots, slot, off: int, chunk):
+    """Write ``chunk`` (2, L, n, KVH, hd) into a page at token offsets
+    [off, off + n) — the mid-page landing zone of a suffix prefill."""
+    n = chunk.shape[2]
+    return slots.at[slot, :, :, off:off + n].set(chunk.astype(slots.dtype))
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -180,7 +241,8 @@ def _paginate(k, v, ps: int, n_pages: int):
 
 
 class PagePool:
-    """Block allocator + page table over one preallocated KV slab."""
+    """Refcounted block allocator + page table + radix prefix index over one
+    preallocated KV slab."""
 
     def __init__(self, cfg: PoolConfig, *, n_layers: int, n_kv_heads: int,
                  head_dim: int):
@@ -197,6 +259,11 @@ class PagePool:
         self.eb_abs: jax.Array | None = None
         self._fzc = cfg.fz_config()
         self.stats = PoolStats()
+        self.radix: RadixIndex | None = None
+        if cfg.prefix_mode != "off":
+            self.radix = RadixIndex(self._ref, self._unref,
+                                    min_match=cfg.min_match,
+                                    max_cached_pages=cfg.max_cached_pages)
 
     # -- geometry / accounting ------------------------------------------------
 
@@ -222,6 +289,8 @@ class PagePool:
         return (self.cfg.num_pages - len(self.free_slots)) * self.slot_bytes
 
     def compressed_used_bytes(self) -> int:
+        """Each distinct container counted once, however many sequences map
+        its page (pinned in tests — sharing must not inflate this)."""
         return sum(int(p.comp.used_bytes()) for p in self.pages.values()
                    if p.comp is not None)
 
@@ -231,12 +300,28 @@ class PagePool:
                    if p.comp is not None)
 
     def used_bytes(self) -> int:
-        """Raw slab in use + actual compressed payload bytes."""
+        """Raw slab in use + actual compressed payload bytes (physical —
+        shared pages once)."""
         return self.raw_bytes_in_use() + self.compressed_used_bytes()
 
     def live_demand_bytes(self) -> int:
-        """What the same live pages would occupy held fully raw."""
+        """What the live *physical* pages would occupy held fully raw."""
         return len(self.pages) * self.slot_bytes
+
+    def logical_page_refs(self) -> int:
+        """Per-sequence page mappings (a page shared by 3 readers counts 3)."""
+        return sum(len(pids) for pids in self.seq_pages.values())
+
+    def logical_demand_bytes(self) -> int:
+        """What the live page-table mappings would cost raw AND private —
+        the no-compression, no-sharing baseline."""
+        return self.logical_page_refs() * self.slot_bytes
+
+    def compression_ratio(self) -> float:
+        """Effective capacity multiplier: logical demand / physical bytes.
+        Honest under sharing because both terms count a shared physical page
+        exactly once in the denominator and once per reader in the numerator."""
+        return self.logical_demand_bytes() / max(1, self.used_bytes())
 
     def note_high_water(self) -> None:
         """Sample peaks at allocation/promotion time (the true maxima —
@@ -248,6 +333,8 @@ class PagePool:
                                           self.used_bytes())
         self.stats.high_water_demand_bytes = max(
             self.stats.high_water_demand_bytes, self.live_demand_bytes())
+        self.stats.high_water_logical_bytes = max(
+            self.stats.high_water_logical_bytes, self.logical_demand_bytes())
 
     # -- error bound ----------------------------------------------------------
 
@@ -257,7 +344,18 @@ class PagePool:
             self.eb_abs = fz.resolve_eb(
                 sample.astype(jnp.float32).reshape(-1), rcfg)
 
-    # -- allocator ------------------------------------------------------------
+    # -- allocator / refcounts ------------------------------------------------
+
+    def _ref(self, pid: int) -> None:
+        self.pages[pid].refs += 1
+
+    def _unref(self, pid: int) -> None:
+        page = self.pages[pid]
+        page.refs -= 1
+        if page.refs <= 0:
+            if page.slot is not None:
+                self.free_slots.append(page.slot)
+            del self.pages[pid]
 
     def alloc_page(self, seq: int, step: int) -> int | None:
         """Allocate (and zero) a fresh raw page for ``seq``; None if no slot."""
@@ -267,24 +365,129 @@ class PagePool:
         self.slots = _zero_slot(self.slots, slot)
         pid = self._next_page
         self._next_page += 1
-        self.pages[pid] = Page(pid, seq, len(self.seq_pages.setdefault(seq, [])),
-                               slot=slot, last_write=step)
-        self.seq_pages[seq].append(pid)
+        self.pages[pid] = Page(pid, slot=slot, last_write=step)
+        self.seq_pages.setdefault(seq, []).append(pid)
         self.seq_len.setdefault(seq, 0)
         self.note_high_water()
         return pid
 
     def free_seq(self, seq: int) -> None:
+        """Drop ``seq``'s mappings; physical pages survive while the radix
+        tree (or another reader) still references them."""
         for pid in self.seq_pages.pop(seq, []):
-            page = self.pages.pop(pid)
-            if page.slot is not None:
-                self.free_slots.append(page.slot)
+            self._unref(pid)
         self.seq_len.pop(seq, None)
+
+    def _cow_page(self, seq: int, idx: int, step: int) -> bool:
+        """Copy-on-write: replace ``seq``'s page at ``idx`` with a private raw
+        copy (decompressing a cold donor transiently); the donor keeps its
+        other references untouched. False if no free slot."""
+        old_pid = self.seq_pages[seq][idx]
+        old = self.pages[old_pid]
+        if not self.free_slots:
+            return False
+        slot = self.free_slots.pop()
+        if old.slot is not None:
+            self.slots = _copy_slot(self.slots, slot, old.slot)
+        else:
+            self.slots = _set_slot(self.slots, slot, self._decompress(old))
+        pid = self._next_page
+        self._next_page += 1
+        self.pages[pid] = Page(pid, slot=slot, last_write=step)
+        self.seq_pages[seq][idx] = pid
+        self._unref(old_pid)
+        self.stats.cow_promotions += 1
+        self.note_high_water()
+        return True
+
+    # -- prefix sharing -------------------------------------------------------
+
+    def match_prefix(self, tokens) -> PrefixMatch:
+        """Longest radix-cached prefix of ``tokens`` (pure; no state change)."""
+        if self.radix is None:
+            return EMPTY_MATCH
+        return self.radix.match(tokens)
+
+    def admit_slot_demand(self, match: PrefixMatch, prompt_len: int) -> int:
+        """Physical slots an admission with this match will consume: fresh
+        suffix pages, plus the CoW copy of a partially-matched tail, plus
+        (copy mode) a private duplicate of every matched page."""
+        ps = self.cfg.page_size
+        matched = match.matched_tokens
+        if matched == 0:
+            return max(1, -(-prompt_len // ps))
+        need = -(-prompt_len // ps) - len(match.pids)   # fresh suffix pages
+        if matched % ps:
+            need += 1                                   # CoW of the tail page
+        if self.cfg.prefix_mode == "copy":
+            need += len(match.pids)
+        return need
+
+    def map_prefix(self, seq: int, match: PrefixMatch, step: int) -> bool:
+        """Attach a matched prefix to ``seq``: shared mappings (refs++) in
+        radix mode, private duplicates in copy mode. Partially-matched tails
+        are CoW'd immediately — the suffix prefill writes into them. The
+        caller must have reserved ``admit_slot_demand`` slots."""
+        assert seq not in self.seq_pages, f"seq {seq} already has pages"
+        matched = match.matched_tokens
+        if matched == 0:
+            return True
+        if self.cfg.prefix_mode == "copy":
+            datas = self._page_datas([self.pages[p] for p in match.pids])
+            pids = []
+            for data in datas:
+                if not self.free_slots:
+                    for p in pids:      # roll back partial allocation
+                        self._unref(p)
+                    self.seq_pages.pop(seq, None)
+                    return False
+                slot = self.free_slots.pop()
+                self.slots = _set_slot(self.slots, slot, data)
+                pid = self._next_page
+                self._next_page += 1
+                self.pages[pid] = Page(pid, slot=slot, last_write=step)
+                pids.append(pid)
+            self.seq_pages[seq] = pids
+        else:
+            for pid in match.pids:
+                self._ref(pid)
+            self.seq_pages[seq] = list(match.pids)
+        self.seq_len[seq] = matched
+        self.radix.touch(match, step)
+        self.stats.prefix_hit_pages += len(match.pids)
+        self.stats.prefix_hit_tokens += matched
+        self.note_high_water()
+        if matched % self.cfg.page_size and self.cfg.prefix_mode != "copy":
+            if not self._cow_page(seq, len(match.pids) - 1, step):
+                self.free_seq(seq)
+                return False
+        return True
+
+    def insert_prompt(self, seq: int, tokens, step: int) -> int:
+        """Cache ``seq``'s prompt pages in the radix tree (token runs keyed
+        per page; the partial tail run too). Pages already cached by exact
+        run are skipped, so each physical page gets at most one node."""
+        if self.radix is None:
+            return 0
+        tokens = [int(t) for t in tokens]
+        ps = self.cfg.page_size
+        n = -(-len(tokens) // ps)
+        runs = [tuple(tokens[i * ps: min((i + 1) * ps, len(tokens))])
+                for i in range(n)]
+        return self.radix.insert_runs(runs, self.seq_pages[seq][:n], step)
+
+    def release_prefix_cache(self) -> int:
+        """Drop every radix-cached page reference (end-of-trace drain)."""
+        if self.radix is None:
+            return 0
+        return self.radix.release_all()
 
     # -- tiering --------------------------------------------------------------
 
     def compress_page(self, pid: int) -> None:
-        """Raw -> compressed: FZ the page contents, release the slot.
+        """Raw -> compressed: FZ the page contents, release the slot. Safe on
+        shared pages — every reader sees the same container, and writers CoW
+        before touching it anyway.
 
         The slab dtype flows into the container (not the pipeline's internal
         float32), so ``raw_bytes``/``compression_ratio`` stay honest for
@@ -301,9 +504,8 @@ class PagePool:
 
     def compress_pages(self, pids: list[int]) -> None:
         """Batched raw -> compressed: one vmapped FZ dispatch for the whole
-        set (ROADMAP "kvpool batched tiering"); bit-identical per page to
-        ``compress_page``. Duplicate, already-compressed and freed pids are
-        skipped."""
+        set; bit-identical per page to ``compress_page``. Duplicate,
+        already-compressed and freed pids are skipped."""
         pids = [pid for pid in dict.fromkeys(pids)
                 if pid in self.pages and self.pages[pid].slot is not None]
         if len(pids) <= 1:
@@ -322,7 +524,9 @@ class PagePool:
             self.stats.compressions += 1
 
     def promote_page(self, pid: int, step: int) -> bool:
-        """Compressed -> raw (needed before a write); False if no free slot."""
+        """Compressed -> raw in place (needed before a write to a *private*
+        page); False if no free slot. Shared pages are never promoted in
+        place — writers fork via ``_cow_page`` instead."""
         page = self.pages[pid]
         if page.slot is not None:
             return True
@@ -345,6 +549,7 @@ class PagePool:
         if not pages:
             return []
         self.stats.decompressions += len(pages)
+        self.stats.decompress_dispatches += 1
         if len(pages) == 1:
             rec = fz.decompress(pages[0].comp, self._fzc)[None]
         else:
@@ -353,6 +558,15 @@ class PagePool:
             rec = _decompress_pages_batch(stacked, self._fzc)
         return [rec[i].reshape(self.page_shape).astype(self.slots.dtype)
                 for i in range(len(pages))]
+
+    def _page_datas(self, pages: list[Page]) -> list[jax.Array]:
+        """Contents of a mixed raw/cold page list (cold ones in one batched
+        transient decode)."""
+        cold = [p for p in pages if p.slot is None]
+        cold_data = dict(zip((p.page_id for p in cold),
+                             self._decompress_many(cold)))
+        return [self.slots[p.slot] if p.slot is not None
+                else cold_data[p.page_id] for p in pages]
 
     def page_data(self, pid: int) -> jax.Array:
         """Page contents (2, L, ps, KVH, hd); cold pages decompress transiently."""
@@ -382,12 +596,50 @@ class PagePool:
         self.seq_len[seq] = length
         return True
 
+    def write_suffix(self, seq: int, k: jax.Array, v: jax.Array,
+                     suffix_len: int, step: int) -> bool:
+        """Ingest a suffix prefill (L, 1, Ssuf_pad, KVH, hd) covering token
+        positions [seq_len, seq_len + suffix_len): the tail of the mapped
+        prefix fills first (that page was CoW'd private by ``map_prefix``),
+        then fresh pages. Slot demand was reserved via ``admit_slot_demand``."""
+        ps = self.cfg.page_size
+        start = self.seq_len.get(seq, 0)
+        end = start + suffix_len
+        if end > self.cfg.seq_capacity:
+            raise ValueError(f"suffix overruns seq_capacity for seq {seq}")
+        need_fresh = -(-end // ps) - len(self.seq_pages.get(seq, []))
+        if need_fresh > len(self.free_slots):
+            return False
+        self._ensure_eb(k)
+        kv = jnp.stack([k[:, 0], v[:, 0]])        # (2, L, Ssuf_pad, KVH, hd)
+        cursor = 0
+        while cursor < suffix_len:
+            pos = start + cursor
+            idx, off = pos // ps, pos % ps
+            n = min(ps - off, suffix_len - cursor)
+            if idx >= len(self.seq_pages.get(seq, [])):
+                pid = self.alloc_page(seq, step)
+                assert pid is not None, "reserved slots exhausted mid-suffix"
+            else:
+                pid = self.seq_pages[seq][idx]
+            page = self.pages[pid]
+            assert page.slot is not None and page.refs == 1, \
+                "suffix write target must be a private raw page"
+            chunk = kv[:, :, cursor:cursor + n]
+            self.slots = _write_span(self.slots, page.slot, off, chunk)
+            page.last_write = step
+            cursor += n
+        self.seq_len[seq] = end
+        return True
+
     def append_token(self, seq: int, k_vec: jax.Array, v_vec: jax.Array,
                      step: int) -> bool:
         """Write one decode step's K/V (each (L, KVH, hd)) at the tail.
 
-        The caller must have secured tail capacity (``tail_writable``); returns
-        False when it has not (no slot for a fresh page / promotion).
+        A shared tail (refs > 1 — e.g. the radix tree caches it) is CoW'd to
+        a private copy first; a private compressed tail is promoted in place.
+        The caller must have secured tail capacity (``tail_writable``);
+        returns False when it has not.
         """
         ps = self.cfg.page_size
         pos = self.seq_len[seq]
@@ -396,9 +648,14 @@ class PagePool:
         if pos % ps == 0:
             if self.alloc_page(seq, step) is None:
                 return False
-        pid = self.seq_pages[seq][pos // ps]
+        idx = pos // ps
+        pid = self.seq_pages[seq][idx]
         page = self.pages[pid]
-        if page.slot is None and not self.promote_page(pid, step):
+        if page.refs > 1:
+            if not self._cow_page(seq, idx, step):
+                return False
+            page = self.pages[self.seq_pages[seq][idx]]
+        elif page.slot is None and not self.promote_page(pid, step):
             return False
         self.slots = _set_token(self.slots, page.slot, pos % ps, k_vec, v_vec)
         page.last_write = step
@@ -407,12 +664,15 @@ class PagePool:
 
     def tail_slot_demand(self, seq: int) -> int:
         """Physical slots the next ``append_token`` for ``seq`` will consume:
-        1 if it opens a fresh page or must promote a compressed tail, else 0."""
+        1 if it opens a fresh page, CoWs a shared tail, or promotes a
+        compressed private tail; else 0."""
         pos = self.seq_len[seq]
         if pos % self.cfg.page_size == 0:       # next write opens a new page
             return 1
-        pid = self.seq_pages[seq][pos // self.cfg.page_size]
-        return 0 if self.pages[pid].slot is not None else 1
+        page = self.pages[self.seq_pages[seq][pos // self.cfg.page_size]]
+        if page.refs > 1:
+            return 1                            # copy-on-write fork
+        return 0 if page.slot is not None else 1
 
     def tail_writable(self, seq: int) -> bool:
         """Can the next ``append_token`` for ``seq`` proceed right now?"""
@@ -423,15 +683,20 @@ class PagePool:
     def _lane_pages(self, lane_seqs: list[int | None]):
         """Stack every lane's pages: (B, P, 2, L, ps, KVH, hd) + (B,) lengths.
 
-        Cold pages across ALL lanes decompress in one vmapped dispatch
-        (transiently — reading never changes a page's tier); empty lanes are
-        zero-filled at length 0.
+        The dedup read path: cold page IDs are deduplicated across ALL lanes
+        before the one vmapped transient decode, so a shared cold container
+        is decoded at most once per scheduler step and its reconstruction
+        fanned out to every reader lane (reading never changes a page's
+        tier). Empty lanes are zero-filled at length 0.
         """
         P = self.cfg.max_pages_per_seq
         lane_pids = [self.seq_pages.get(seq, []) if seq is not None else []
                      for seq in lane_seqs]
-        cold = [pid for pids in lane_pids for pid in pids
-                if self.pages[pid].slot is None]
+        cold_occurrences = [pid for pids in lane_pids for pid in pids
+                            if self.pages[pid].slot is None]
+        cold = list(dict.fromkeys(cold_occurrences))
+        self.stats.shared_cold_reads_deduped += (len(cold_occurrences)
+                                                 - len(cold))
         cold_data = dict(zip(cold, self._decompress_many(
             [self.pages[pid] for pid in cold])))
         lanes = []

@@ -1,22 +1,38 @@
-"""Continuous batching over the paged FZ KV pool.
+"""Continuous batching over the paged, prefix-shared FZ KV pool.
 
-vLLM-style serving loop at the scale of this repo: requests are admitted into
-a fixed number of decode *lanes* (the decode batch width, so the decode step
-compiles once), every step decodes one token for every running sequence, and
-memory pressure is resolved by *compress-parking* — a preempted sequence's
-pages are FZ-compressed in place and its lane freed; nothing is recomputed on
-resume. State machine per request:
+vLLM-style serving loop at the scale of this repo: requests arrive over time
+(``Request.arrive_at``, in scheduler steps), are admitted into a fixed number
+of decode *lanes* (the decode batch width, so the decode step compiles once),
+every step decodes one token for every running sequence, and memory pressure
+is resolved by *compress-parking* — a preempted sequence's pages are
+FZ-compressed in place and its lane freed; nothing is recomputed on resume.
+State machine per request:
 
     WAITING --admit(prefill -> raw pages)--> RUNNING
     RUNNING --preempt(compress all pages)--> PARKED
     PARKED  --resume(promote tail page)----> RUNNING
     RUNNING --n_new tokens emitted---------> FINISHED
 
-Scheduling order is (priority desc, arrival asc) for admission/resume and
-lowest-priority / latest-arrival for preemption (policy.TieredPolicy.victim).
+Admission first walks the pool's radix prefix index: a hit maps the matched
+prefix onto existing (possibly shared, possibly compressed) pages and only
+the *suffix* is prefilled — ``engine.prefill_suffix`` computes K/V for the
+unmatched tokens attending to the cached prefix, and the prompt's pages are
+then cached in the tree for the next arrival. A miss (or ``prefix_mode
+"off"``, or an engine without suffix prefill) takes the full-prefill path,
+byte-for-byte the non-shared scheduler.
+
+Scheduling order is fully deterministic, including under equal priority and
+equal arrival: admission sorts by (priority desc, arrive_at asc, req_id asc),
+resume by (priority desc, arrival asc, req_id asc), and preemption picks the
+lowest priority / latest arrival / highest seq id victim — so trace-driven
+benchmarks reproduce run-to-run.
+
 Every step also runs the routine cooling pass: pages unwritten for
 ``cold_after`` steps tier down to compressed, which is what creates capacity
-for more concurrent sequences than the raw slab could hold.
+for more concurrent sequences than the raw slab could hold. Latency is
+tracked in scheduler steps: TTFT (admission step minus arrival) and
+inter-token gaps (preemption stretches them) land in ``TraceStats`` per
+request for the SLO accounting in ``tracegen.latency_summary``.
 """
 from __future__ import annotations
 
@@ -28,6 +44,7 @@ import numpy as np
 
 from .policy import TieredPolicy
 from .pool import PagePool
+from .radix import EMPTY_MATCH, PrefixMatch
 
 WAITING, RUNNING, PARKED, FINISHED = "waiting", "running", "parked", "finished"
 
@@ -38,6 +55,7 @@ class Request:
     tokens: np.ndarray          # (S,) int32 prompt
     n_new: int                  # tokens to generate (incl. the prefill argmax)
     priority: int = 0           # higher wins admission / survives preemption
+    arrive_at: int = 0          # scheduler step the request becomes admissible
 
 
 @dataclasses.dataclass
@@ -45,9 +63,12 @@ class SeqRecord:
     req: Request
     state: str = WAITING
     lane: int | None = None
-    arrival: int = 0
+    arrival: int = 0            # admission step (preemption recency key)
     generated: list[int] = dataclasses.field(default_factory=list)
     last_token: int = 0
+    ttft: int | None = None     # steps from arrive_at to the first token
+    last_emit: int = 0          # step of the most recent token (ITL clock)
+    itl: list[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -60,8 +81,19 @@ class TraceStats:
     tiered_pages: int = 0
     high_water_used_bytes: int = 0     # raw slab in use + compressed payloads
     high_water_demand_bytes: int = 0   # same live pages if held fully raw
+    high_water_logical_bytes: int = 0  # per-seq mappings if raw and private
     pool_compressions: int = 0
     pool_decompressions: int = 0
+    # prefix sharing
+    prefix_hits: int = 0               # admissions that matched a cached prefix
+    prefill_tokens: int = 0            # tokens actually pushed through prefill
+    prefill_tokens_saved: int = 0      # prompt tokens served from the radix cache
+    cow_promotions: int = 0            # shared-page writes forked to a copy
+    shared_cold_reads_deduped: int = 0  # per-step cold decodes avoided by dedup
+    decompress_dispatches: int = 0     # vmapped cold-read dispatches issued
+    # latency (scheduler steps), per req_id — joined with SLOs in tracegen
+    ttft_steps: dict[int, int] = dataclasses.field(default_factory=dict)
+    itl_steps: dict[int, list[int]] = dataclasses.field(default_factory=dict)
 
 
 @jax.jit
@@ -77,7 +109,7 @@ def _lane_kv(k_new, v_new, lane):
 
 
 class ContinuousBatcher:
-    """admit / step / preempt / resume over a synthetic request trace."""
+    """admit / step / preempt / resume over a (possibly timed) request trace."""
 
     def __init__(self, engine, pool: PagePool, *, max_batch: int = 2,
                  policy: TieredPolicy | None = None, max_steps: int = 10_000):
@@ -87,6 +119,11 @@ class ContinuousBatcher:
         self.policy = policy or TieredPolicy(cold_after=pool.cfg.cold_after)
         self.max_steps = max_steps
         self.paged_decode = bool(getattr(engine, "paged_decode_enabled", False))
+        # prefix sharing needs both the pool's radix index and an engine that
+        # can prefill a suffix against cached prefix K/V; without either, the
+        # loop is byte-for-byte the non-shared scheduler
+        self.prefix = (pool.radix is not None
+                       and callable(getattr(engine, "prefill_suffix", None)))
         self.lanes: list[int | None] = [None] * max_batch
         self.recs: dict[int, SeqRecord] = {}
         self.stats = TraceStats()
@@ -113,10 +150,21 @@ class ContinuousBatcher:
         rec.lane, rec.state = None, PARKED
         self.stats.preemptions += 1
 
+    def _emit(self, rec: SeqRecord, tok: int, step: int) -> None:
+        """Record one generated token + its latency sample."""
+        if not rec.generated:
+            rec.ttft = step - rec.req.arrive_at
+        else:
+            rec.itl.append(step - rec.last_emit)
+        rec.generated.append(tok)
+        rec.last_token, rec.last_emit = tok, step
+
     def _finish(self, seq: int, outputs: dict) -> None:
         rec = self.recs[seq]
         outputs[rec.req.req_id] = np.asarray(rec.generated[: rec.req.n_new],
                                              np.int32)
+        self.stats.ttft_steps[rec.req.req_id] = rec.ttft
+        self.stats.itl_steps[rec.req.req_id] = rec.itl[: rec.req.n_new - 1]
         self.pool.free_seq(seq)
         if rec.lane is not None:
             self.lanes[rec.lane] = None
@@ -144,8 +192,23 @@ class ContinuousBatcher:
 
     # -- admission / resume ---------------------------------------------------
 
+    def _start_running(self, rec: SeqRecord, logits, step: int,
+                       outputs: dict) -> None:
+        """Common admission tail: lane assignment + first token + finish."""
+        seq = rec.req.req_id
+        lane = self._free_lane()
+        self._emit(rec, int(jnp.argmax(logits[0])), step)
+        rec.lane, rec.state, rec.arrival = lane, RUNNING, step
+        self.lanes[lane] = seq
+        self.stats.admissions += 1
+        if len(rec.generated) >= rec.req.n_new:
+            self._finish(seq, outputs)
+
     def _admit(self, rec: SeqRecord, step: int, outputs: dict) -> bool:
         prompt = np.asarray(rec.req.tokens, np.int32)
+        match = self.pool.match_prefix(prompt) if self.prefix else EMPTY_MATCH
+        if match.matched_tokens:
+            return self._admit_suffix(rec, prompt, match, step, outputs)
         ps = self.pool.cfg.page_size
         n_pages = max(1, -(-len(prompt) // ps))
         while not self.policy.reclaim(self.pool, n_pages, self._protect()):
@@ -163,14 +226,45 @@ class ContinuousBatcher:
         if not self.pool.write_prefill(seq, cache["k"], cache["v"],
                                        len(prompt), step):
             return False
-        lane = self._free_lane()
-        tok = int(jnp.argmax(logits[0]))
-        rec.generated, rec.last_token = [tok], tok
-        rec.lane, rec.state, rec.arrival = lane, RUNNING, step
-        self.lanes[lane] = seq
-        self.stats.admissions += 1
-        if len(rec.generated) >= rec.req.n_new:
-            self._finish(seq, outputs)
+        if self.prefix:
+            self.pool.insert_prompt(seq, prompt, step)
+        self.stats.prefill_tokens += len(prompt)
+        self._start_running(rec, logits, step, outputs)
+        return True
+
+    def _admit_suffix(self, rec: SeqRecord, prompt: np.ndarray,
+                      match: PrefixMatch, step: int, outputs: dict) -> bool:
+        """Prefix-hit admission: map the matched pages, prefill only the
+        suffix against the cached prefix K/V, cache the new pages."""
+        seq = rec.req.req_id
+        ps = self.pool.cfg.page_size
+        matched = match.matched_tokens
+        demand = self.pool.admit_slot_demand(match, len(prompt))
+        while not self.policy.reclaim(self.pool, demand, self._protect()):
+            if not self._preempt_for(step, admitting_priority=rec.req.priority):
+                return False
+        if not self.pool.map_prefix(seq, match, step):
+            return False
+        # suffix padded to its page bucket: one prefill_suffix trace per
+        # bucket shape, logits taken at the true last suffix position
+        suffix = prompt[matched:]
+        n_pages = max(1, -(-len(suffix) // ps))
+        padded = np.zeros(n_pages * ps, np.int32)
+        padded[: len(suffix)] = suffix
+        prefix_view = self.pool.gather([seq])       # length == matched tokens
+        logits, cache = self.engine.prefill_suffix(
+            prefix_view,
+            {"tokens": jnp.asarray(padded)[None],
+             "lengths": jnp.asarray([len(suffix)], jnp.int32)})
+        if not self.pool.write_suffix(seq, cache["k"], cache["v"],
+                                      len(suffix), step):
+            self.pool.free_seq(seq)
+            return False
+        self.pool.insert_prompt(seq, prompt, step)
+        self.stats.prefix_hits += 1
+        self.stats.prefill_tokens += len(suffix)
+        self.stats.prefill_tokens_saved += matched
+        self._start_running(rec, logits, step, outputs)
         return True
 
     def _try_resume(self, rec: SeqRecord, step: int) -> bool:
@@ -188,8 +282,9 @@ class ContinuousBatcher:
     def _secure_tails(self, step: int) -> None:
         """Guarantee every running sequence can take this step's token write."""
         while True:
-            # each pending append consumes at most one slot (fresh tail page
-            # or promotion of a compressed tail); reserve them all at once
+            # each pending append consumes at most one slot (fresh tail page,
+            # CoW fork of a shared tail, or promotion of a compressed tail);
+            # reserve them all at once
             reserve = sum(self.pool.tail_slot_demand(seq)
                           for seq in self.lanes if seq is not None)
             if reserve == 0 or self.policy.reclaim(self.pool, reserve,
@@ -204,15 +299,18 @@ class ContinuousBatcher:
         # 1. routine cooling
         self.stats.tiered_pages += self.policy.tier(self.pool, step,
                                                     self._protect())
-        # 2. resume parked, highest priority / oldest first
+        # 2. resume parked: highest priority, oldest, then req_id
         for rec in sorted((r for r in self.recs.values() if r.state == PARKED),
-                          key=lambda r: (-r.req.priority, r.arrival)):
+                          key=lambda r: (-r.req.priority, r.arrival,
+                                         r.req.req_id)):
             if self._free_lane() is None:
                 break
             progress |= self._try_resume(rec, step)
-        # 3. admit waiting
-        for rec in sorted((r for r in self.recs.values() if r.state == WAITING),
-                          key=lambda r: (-r.req.priority, r.req.req_id)):
+        # 3. admit arrived waiting: priority, arrival time, then req_id
+        for rec in sorted((r for r in self.recs.values()
+                           if r.state == WAITING and r.req.arrive_at <= step),
+                          key=lambda r: (-r.req.priority, r.req.arrive_at,
+                                         r.req.req_id)):
             if self._free_lane() is None:
                 break
             progress |= self._admit(rec, step, outputs)
@@ -248,9 +346,7 @@ class ContinuousBatcher:
                 if not self.pool.append_token(seq, k_vec, v_vec, step):
                     raise RuntimeError("kvpool invariant: tail write failed "
                                        "after _secure_tails")
-                tok = int(jnp.argmax(logits[lane]))
-                rec.generated.append(tok)
-                rec.last_token = tok
+                self._emit(rec, int(jnp.argmax(logits[lane])), step)
                 if len(rec.generated) >= rec.req.n_new:
                     self._finish(seq, outputs)
             self.stats.decode_steps += 1
@@ -259,6 +355,7 @@ class ContinuousBatcher:
         # true maxima); mirror them into the trace stats
         self.stats.high_water_used_bytes = self.pool.stats.high_water_bytes
         self.stats.high_water_demand_bytes = self.pool.stats.high_water_demand_bytes
+        self.stats.high_water_logical_bytes = self.pool.stats.high_water_logical_bytes
         return progress
 
     def run(self, requests: list[Request]) -> tuple[dict[int, np.ndarray],
@@ -281,17 +378,37 @@ class ContinuousBatcher:
         self.recs = {r.req_id: SeqRecord(req=r) for r in requests}
         outputs: dict[int, np.ndarray] = {}
         stalled = 0
-        for step in range(1, self.max_steps + 1):
+        step = 0
+        while step < self.max_steps:
+            step += 1
             if all(r.state == FINISHED for r in self.recs.values()):
                 break
-            stalled = 0 if self.step(step, outputs) else stalled + 1
+            if self.step(step, outputs):
+                stalled = 0
+                continue
+            # idle, not stalled: nothing live yet but arrivals are coming —
+            # fast-forward the clock to the next arrival
+            future = [r.req.arrive_at for r in self.recs.values()
+                      if r.state == WAITING and r.req.arrive_at > step]
+            if future and not any(r.state in (RUNNING, PARKED)
+                                  for r in self.recs.values()):
+                step = min(future) - 1
+                stalled = 0
+                continue
+            stalled += 1
             if stalled > 2:
                 raise RuntimeError(
                     "kvpool scheduler stalled: pool too small for this trace "
                     f"({self.pool.cfg.num_pages} pages, "
                     f"{len(self.recs)} requests)")
-        else:
+        if not all(r.state == FINISHED for r in self.recs.values()):
             raise RuntimeError("kvpool scheduler exceeded max_steps")
+        # end-of-trace drain: the radix cache's page references go last
+        self.pool.release_prefix_cache()
         self.stats.pool_compressions = self.pool.stats.compressions
         self.stats.pool_decompressions = self.pool.stats.decompressions
+        self.stats.cow_promotions = self.pool.stats.cow_promotions
+        self.stats.shared_cold_reads_deduped = (
+            self.pool.stats.shared_cold_reads_deduped)
+        self.stats.decompress_dispatches = self.pool.stats.decompress_dispatches
         return outputs, self.stats

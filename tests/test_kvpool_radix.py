@@ -1,0 +1,417 @@
+"""Prefix-sharing (radix/CoW) kvpool tests: shared-page byte accounting,
+copy-on-write isolation, allocator invariants under random op traces
+(property tier), radix-vs-copy bitwise decode parity, the prefill-token
+win on a seeded prefix-skewed trace, and deterministic scheduling
+tie-breaks under full ties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import zoo
+from repro.serve import Engine
+from repro.serve.kvpool import (ContinuousBatcher, PagePool, PoolConfig,
+                                Request, TieredPolicy, TraceGenConfig,
+                                generate)
+from repro.serve.kvpool.pool import COMPRESSED, RAW
+from repro.serve.kvpool.scheduler import SeqRecord
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+L, KVH, HD = 2, 2, 8     # tiny cache geometry for pool-only tests
+
+
+def make_pool(num_pages=8, ps=4, cap=32, **kw) -> PagePool:
+    cfg = PoolConfig(num_pages=num_pages, page_size=ps, seq_capacity=cap,
+                     eb=1e-3, eb_mode="abs", dtype="float32", **kw)
+    return PagePool(cfg, n_layers=L, n_kv_heads=KVH, head_dim=HD)
+
+
+def seq_kv(seed: int, S: int):
+    rng = np.random.default_rng(seed)
+    shp = (L, 1, S, KVH, HD)
+    return (jnp.asarray(rng.standard_normal(shp), dtype=jnp.float32),
+            jnp.asarray(rng.standard_normal(shp), dtype=jnp.float32))
+
+
+def tree_pids(pool: PagePool) -> list[int]:
+    out = []
+
+    def walk(n):
+        for c in n.children:
+            out.append(c.page_id)
+            walk(c)
+
+    walk(pool.radix.root)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# byte accounting under sharing
+# ---------------------------------------------------------------------------
+
+def test_shared_pages_counted_once_in_used_bytes():
+    """Three readers of one physical prefix: ``used_bytes`` (raw and
+    compressed) charges the page once, ``logical_demand_bytes`` charges it
+    per mapping — the dedup multiplier the pool reports."""
+    pool = make_pool(num_pages=8, ps=4, cap=16, prefix_mode="radix")
+    prompt = np.arange(8, dtype=np.int32)
+    k, v = seq_kv(0, 8)
+    assert pool.write_prefill(0, k, v, 8, step=0)
+    pool.insert_prompt(0, prompt, step=0)
+    sb = pool.slot_bytes
+    assert pool.used_bytes() == 2 * sb
+
+    # two more readers map the same two pages (page-aligned: no CoW)
+    for seq in (1, 2):
+        m = pool.match_prefix(np.concatenate([prompt, [seq + 100]]))
+        assert m.matched_tokens == 8 and len(m.pids) == 2
+        assert pool.admit_slot_demand(m, 9) == 1      # just the suffix page
+        assert pool.map_prefix(seq, m, step=1)
+    assert all(pool.pages[p].refs == 4 for p in pool.seq_pages[0])  # 3 seqs + tree
+    assert pool.logical_page_refs() == 6
+    assert pool.used_bytes() == 2 * sb                # physical unchanged
+    assert pool.logical_demand_bytes() == 6 * sb
+    assert pool.stats.cow_promotions == 0
+
+    # tier the shared pages down: one container each, still counted once
+    pool.compress_pages(list(pool.seq_pages[0]))
+    comp = pool.compressed_used_bytes()
+    assert 0 < comp < 2 * sb
+    assert pool.used_bytes() == comp
+    assert pool.logical_demand_bytes() == 6 * sb      # mappings unchanged
+    assert pool.compression_ratio() == 6 * sb / comp  # dedup x compression
+
+    # physical pages survive until the LAST reference (tree's) is dropped
+    for seq in (0, 1, 2):
+        pool.free_seq(seq)
+    assert len(pool.pages) == 2 and pool.radix.size == 2
+    assert pool.release_prefix_cache() == 2
+    assert not pool.pages and pool.n_free_slots() == 8
+
+
+def test_partial_tail_match_cows_and_isolates_writers():
+    """A mid-page divergence CoWs only the tail page; the suffix write lands
+    in the private copy and the donor sequence's bytes are untouched."""
+    pool = make_pool(num_pages=8, ps=4, cap=16, prefix_mode="radix")
+    prompt0 = np.arange(8, dtype=np.int32)
+    k0, v0 = seq_kv(0, 8)
+    assert pool.write_prefill(0, k0, v0, 8, step=0)
+    pool.insert_prompt(0, prompt0, step=0)
+    donor_k = np.asarray(pool.materialize(0)[0])
+
+    # shares 6 of 8 tokens: full page 0 + 2 tokens of page 1
+    prompt1 = np.concatenate([prompt0[:6], [77, 78, 79]]).astype(np.int32)
+    m = pool.match_prefix(prompt1)
+    assert m.matched_tokens == 6 and m.valids == (4, 2)
+    assert pool.admit_slot_demand(m, len(prompt1)) == 2  # CoW tail + 1 fresh
+    assert pool.map_prefix(1, m, step=1)
+    assert pool.stats.cow_promotions == 1
+    assert pool.seq_pages[1][0] == pool.seq_pages[0][0]      # head shared
+    assert pool.seq_pages[1][1] != pool.seq_pages[0][1]      # tail forked
+
+    ks, vs = seq_kv(9, 3)
+    assert pool.write_suffix(1, ks, vs, 3, step=1)
+    assert pool.seq_len[1] == 9
+    got_k = np.asarray(pool.materialize(1)[0])
+    np.testing.assert_array_equal(got_k[:, 0, :6], np.asarray(k0)[:, 0, :6])
+    np.testing.assert_array_equal(got_k[:, 0, 6:9], np.asarray(ks)[:, 0])
+    # the donor never sees the fork
+    np.testing.assert_array_equal(np.asarray(pool.materialize(0)[0]), donor_k)
+
+
+def test_append_into_tree_cached_tail_cows():
+    """Decode-appending into a page the radix tree references forks it first
+    (the cached prompt must stay immutable for future matchers)."""
+    pool = make_pool(num_pages=8, ps=4, cap=16, prefix_mode="radix")
+    prompt = np.arange(6, dtype=np.int32)          # partial tail page (2/4)
+    k, v = seq_kv(0, 6)
+    assert pool.write_prefill(0, k, v, 6, step=0)
+    pool.insert_prompt(0, prompt, step=0)
+    tail = pool.seq_pages[0][1]
+    assert pool.pages[tail].refs == 2              # seq + tree
+    kv1 = jnp.ones((L, KVH, HD), jnp.float32)
+    assert pool.append_token(0, kv1, 2 * kv1, step=1)
+    assert pool.stats.cow_promotions == 1
+    assert pool.seq_pages[0][1] != tail
+    assert pool.pages[tail].refs == 1              # tree keeps the original
+    m = pool.match_prefix(np.concatenate([prompt, [99]]))
+    assert m.matched_tokens == 6                   # cached prompt intact
+
+
+# ---------------------------------------------------------------------------
+# property tier: allocator invariants under random admit/append/park/finish
+# ---------------------------------------------------------------------------
+
+TEMPLATES = (tuple(range(100, 106)), tuple(range(200, 206)))   # 6 tokens each
+
+OPS = st.lists(st.tuples(st.sampled_from(("admit", "append", "park", "finish")),
+                         st.integers(0, 7)),
+               min_size=4, max_size=28)
+
+
+def _check_invariants(pool: PagePool):
+    n = pool.cfg.num_pages
+    raw_slots = [p.slot for p in pool.pages.values() if p.slot is not None]
+    # slot states partition the slab: every slot free xor raw, no aliasing
+    assert len(raw_slots) == len(set(raw_slots))
+    assert len(pool.free_slots) == len(set(pool.free_slots))
+    assert set(raw_slots).isdisjoint(pool.free_slots)
+    assert len(raw_slots) + len(pool.free_slots) == n
+    assert all(0 <= s < n for s in raw_slots + pool.free_slots)
+    # raw xor compressed, never both
+    for p in pool.pages.values():
+        assert (p.slot is None) != (p.comp is None)
+        assert p.state in (RAW, COMPRESSED)
+    # refcounts == live readers: per-seq mappings + the radix tree's refs
+    expected: dict[int, int] = {}
+    for pids in pool.seq_pages.values():
+        for pid in pids:
+            expected[pid] = expected.get(pid, 0) + 1
+    for pid in tree_pids(pool):
+        expected[pid] = expected.get(pid, 0) + 1
+    assert set(expected) == set(pool.pages)
+    for pid, refs in expected.items():
+        assert pool.pages[pid].refs == refs, pid
+    # page-table geometry
+    for seq, pids in pool.seq_pages.items():
+        assert len(pids) == -(-pool.seq_len[seq] // pool.cfg.page_size)
+
+
+def _make_room(pool: PagePool, need: int, protect: set[int]) -> bool:
+    while pool.n_free_slots() < need:
+        cands = sorted(p.page_id for p in pool.pages.values()
+                       if p.slot is not None and p.page_id not in protect)
+        if not cands:
+            return False
+        pool.compress_page(cands[0])
+    return True
+
+
+@settings(max_examples=12, deadline=None)
+@given(OPS)
+def test_allocator_invariants_random_traces(ops):
+    """Random admit/append/park/finish traces with template-sharing prompts:
+    after every op the slab partitions into free|raw slots, refcounts equal
+    live readers (seq mappings + tree), and the drain leaks nothing."""
+    pool = make_pool(num_pages=6, ps=4, cap=16, prefix_mode="radix")
+    live: list[int] = []
+    next_seq = 0
+    for op, arg in ops:
+        if op == "admit":
+            seq = next_seq
+            prompt = np.asarray(TEMPLATES[arg % 2] + (300 + seq, 301 + seq),
+                                np.int32)
+            m = pool.match_prefix(prompt)
+            demand = pool.admit_slot_demand(m, len(prompt))
+            if not _make_room(pool, demand, set()):
+                continue
+            if m.matched_tokens:
+                if not pool.map_prefix(seq, m, step=seq):
+                    continue
+                suf = len(prompt) - m.matched_tokens
+                ks, vs = seq_kv(50 + seq, suf)
+                assert pool.write_suffix(seq, ks, vs, suf, step=seq)
+            else:
+                k, v = seq_kv(50 + seq, len(prompt))
+                if not pool.write_prefill(seq, k, v, len(prompt), step=seq):
+                    continue
+            pool.insert_prompt(seq, prompt, step=seq)
+            live.append(seq)
+            next_seq += 1
+        elif op == "append" and live:
+            seq = live[arg % len(live)]
+            if pool.seq_len[seq] >= pool.cfg.seq_capacity:
+                continue
+            if not pool.tail_writable(seq) and not _make_room(
+                    pool, pool.tail_slot_demand(seq), set()):
+                continue
+            kv1 = jnp.full((L, KVH, HD), float(arg), jnp.float32)
+            pool.append_token(seq, kv1, -kv1, step=100 + arg)
+        elif op == "park" and live:
+            seq = live[arg % len(live)]
+            pool.compress_pages(list(pool.seq_pages[seq]))
+        elif op == "finish" and live:
+            seq = live.pop(arg % len(live))
+            pool.free_seq(seq)
+        _check_invariants(pool)
+    # drain: finish everything, then drop the radix cache — no leaks
+    for seq in live:
+        pool.free_seq(seq)
+    pool.release_prefix_cache()
+    _check_invariants(pool)
+    assert not pool.pages and not pool.seq_pages
+    assert sorted(pool.free_slots) == list(range(pool.cfg.num_pages))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity + the prefill win (real engine)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = configs.get("glm4-9b", smoke=True)
+    model = zoo.build(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _template_requests(cfg, n=3, seed=0):
+    """n requests sharing one 16-token template with distinct 3-token tails."""
+    rng = np.random.default_rng(seed)
+    template = rng.integers(0, cfg.vocab, (16,), dtype=np.int32)
+    return [Request(req_id=i,
+                    tokens=np.concatenate(
+                        [template,
+                         rng.integers(0, cfg.vocab, (3,), dtype=np.int32)]),
+                    n_new=4)
+            for i in range(n)]
+
+
+def _pool_cfg(**kw):
+    base = dict(num_pages=12, page_size=8, seq_capacity=48, cold_after=100,
+                eb=1e-4)
+    base.update(kw)
+    return PoolConfig(**base)
+
+
+def test_radix_copy_bitwise_parity(tiny_engine):
+    """With ample slots, the shared pool's decode cache is bit-identical per
+    step to the copy pool's (same matching, private duplicates) — sharing
+    changes storage, never values. Lockstep-compared via ``gather``."""
+    cfg, model, params = tiny_engine
+    reqs = _template_requests(cfg)
+    engines, batchers, outs = {}, {}, {}
+    for mode in ("radix", "copy"):
+        eng = Engine(model, params, pool=_pool_cfg(prefix_mode=mode))
+        pool = eng.make_pool()
+        b = ContinuousBatcher(eng, pool, max_batch=3)
+        b.recs = {r.req_id: SeqRecord(req=r) for r in reqs}
+        engines[mode], batchers[mode], outs[mode] = eng, b, {}
+    for step in range(1, 10):
+        done = True
+        for mode in ("radix", "copy"):
+            batchers[mode].step(step, outs[mode])
+            done &= all(r.state == "finished"
+                        for r in batchers[mode].recs.values())
+        br, bc = batchers["radix"], batchers["copy"]
+        assert br.lanes == bc.lanes                 # identical scheduling
+        gr = br.pool.gather(br.lanes)
+        gc = bc.pool.gather(bc.lanes)
+        np.testing.assert_array_equal(np.asarray(gr["length"]),
+                                      np.asarray(gc["length"]))
+        np.testing.assert_array_equal(np.asarray(gr["k"]), np.asarray(gc["k"]))
+        np.testing.assert_array_equal(np.asarray(gr["v"]), np.asarray(gc["v"]))
+        if done:
+            break
+    assert done
+    assert batchers["radix"].stats.prefix_hits >= 2        # sharing really ran
+    assert batchers["copy"].stats.prefix_hits >= 2
+    # the shared pool held fewer physical raw pages at peak
+    assert (br.pool.stats.high_water_slots < bc.pool.stats.high_water_slots)
+    for r in reqs:
+        np.testing.assert_array_equal(outs["radix"][r.req_id],
+                                      outs["copy"][r.req_id])
+
+
+def test_radix_below_min_match_is_the_off_scheduler(tiny_engine):
+    """With ``min_match_tokens`` above every prompt, the radix pool never
+    matches and serves the trace token-identically to ``prefix_mode="off"``
+    — the fallback really is the non-shared scheduler."""
+    cfg, model, params = tiny_engine
+    reqs = _template_requests(cfg)
+    outs = {}
+    for name, pc in (("gated", _pool_cfg(prefix_mode="radix",
+                                         min_match_tokens=10_000)),
+                     ("off", _pool_cfg(prefix_mode="off"))):
+        eng = Engine(model, params, pool=pc)
+        outputs, stats, _ = eng.serve(list(reqs), max_batch=3)
+        assert stats.prefix_hits == 0 and stats.prefill_tokens_saved == 0
+        outs[name] = outputs
+    for r in reqs:
+        np.testing.assert_array_equal(outs["gated"][r.req_id],
+                                      outs["off"][r.req_id])
+
+
+def test_prefix_sharing_prefill_and_memory_win(tiny_engine):
+    """The seeded prefix-skewed trace: radix admits >= 2x fewer prefill
+    tokens than the non-shared pool and peaks no higher on physical bytes,
+    with every prompt token accounted prefilled-or-saved."""
+    cfg, model, params = tiny_engine
+    tg = TraceGenConfig(seed=7, n_requests=6, vocab=cfg.vocab,
+                        arrival_rate=1.5, n_templates=1, template_len=(16, 22),
+                        template_reuse=0.75, suffix_len=(2, 5), n_new=(3, 4))
+    reqs = generate(tg)
+    total_prompt = sum(len(r.tokens) for r in reqs)
+    stats = {}
+    for mode in ("radix", "off"):
+        eng = Engine(model, params,
+                     pool=_pool_cfg(num_pages=6, cold_after=2, prefix_mode=mode,
+                                    max_cached_pages=6))
+        outputs, st_, _ = eng.serve(list(reqs), max_batch=3)
+        assert len(outputs) == len(reqs)
+        assert st_.prefill_tokens + st_.prefill_tokens_saved == total_prompt
+        stats[mode] = st_
+    radix, off = stats["radix"], stats["off"]
+    assert off.prefill_tokens == total_prompt
+    assert off.prefill_tokens_saved == 0
+    assert radix.prefix_hits >= 2
+    assert off.prefill_tokens >= 2 * radix.prefill_tokens
+    assert radix.high_water_used_bytes <= off.high_water_used_bytes
+
+
+# ---------------------------------------------------------------------------
+# deterministic tie-breaks (scheduler bugfix ride-along)
+# ---------------------------------------------------------------------------
+
+def test_victim_total_order_under_full_ties():
+    """Equal priority AND equal arrival: the victim is the highest seq id,
+    deterministically — not dict-iteration order."""
+    running = {3: (0, 5), 1: (0, 5), 2: (0, 5)}
+    assert TieredPolicy.victim(running) == 3
+    assert TieredPolicy.victim(dict(sorted(running.items()))) == 3
+    # arrival still dominates the id tie-break
+    assert TieredPolicy.victim({1: (0, 7), 2: (0, 5)}) == 1   # latest arrival
+    # priority dominates everything
+    assert TieredPolicy.victim({1: (0, 9), 2: (1, 1)}) == 1
+
+
+def test_reclaim_compresses_in_page_id_order_on_write_ties():
+    """Pages with identical last_write reclaim lowest page_id first."""
+    pool = make_pool(num_pages=4, ps=4, cap=16, prefix_mode="off")
+    for seq in range(4):
+        k, v = seq_kv(seq, 4)
+        assert pool.write_prefill(seq, k, v, 4, step=0)   # all last_write=0
+    assert TieredPolicy().reclaim(pool, 2, protect=set())
+    comp = sorted(p.page_id for p in pool.pages.values() if p.comp is not None)
+    assert comp == [0, 1]
+
+
+def test_admission_tie_break_is_req_id(tiny_engine):
+    """Two requests, same priority, same arrive_at, one lane: req_id admits
+    first — and the whole trace replays identically."""
+    cfg, model, params = tiny_engine
+    rng = np.random.default_rng(3)
+    reqs = [Request(req_id=i,
+                    tokens=rng.integers(0, cfg.vocab, (8,), dtype=np.int32),
+                    n_new=3, priority=1, arrive_at=1)
+            for i in (0, 1)]
+    runs = []
+    for _ in range(2):
+        eng = Engine(model, params, pool=_pool_cfg(prefix_mode="off"))
+        pool = eng.make_pool()
+        b = ContinuousBatcher(eng, pool, max_batch=1)
+        b.recs = {r.req_id: SeqRecord(req=r) for r in reqs}
+        outs = {}
+        b.step(1, outs)
+        assert b.recs[0].state == "running"      # req_id 0 wins the lane
+        assert b.recs[1].state == "waiting"
+        while not all(r.state == "finished" for r in b.recs.values()):
+            b.step(b.stats.decode_steps + 2, outs)
+        runs.append({k: np.asarray(v) for k, v in outs.items()})
+    for k in runs[0]:
+        np.testing.assert_array_equal(runs[0][k], runs[1][k])
