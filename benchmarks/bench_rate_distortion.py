@@ -19,26 +19,27 @@ def run(shape=(64, 64, 64), kinds=FIELD_KINDS, ebs=PAPER_EBS):
     rows = []
     for kind in kinds:
         f = jnp.asarray(make_field(kind, shape, seed=11))
-        raw = f.size * 4
+        raw = f.size * f.dtype.itemsize
+        br = lambda comp_bytes: float(metrics.bitrate(raw, comp_bytes, f.dtype))
         for eb in ebs:
             cfg = fz.FZConfig(eb=eb)
             rec, c = fz.roundtrip(f, cfg)
             eb_abs = float(c.eb_abs)
             psnr_fz = float(metrics.psnr(f, rec))
-            br_fz = 32.0 * float(c.used_bytes()) / raw
+            br_fz = br(float(c.used_bytes()))
             cz = baselines.cusz_like(np.asarray(f), eb_abs)
             psnr_cz = float(metrics.psnr(f, jnp.asarray(cz.reconstruction)))
-            br_cz = 32.0 * cz.compressed_bytes / raw
+            br_cz = br(cz.compressed_bytes)
             rx, bx = baselines.cuszx_like(f, jnp.float32(eb_abs))
             psnr_x = float(metrics.psnr(f, rx))
-            br_x = 32.0 * float(bx) / raw
+            br_x = br(float(bx))
             # cuZFP: search the rate whose PSNR best matches FZ's
             best = None
             for rate in (2, 4, 6, 8, 10, 12, 14, 16):
                 rz, bz = baselines.cuzfp_like(f, rate)
                 p = float(metrics.psnr(f, rz))
                 if best is None or abs(p - psnr_fz) < abs(best[0] - psnr_fz):
-                    best = (p, 32.0 * float(bz) / raw, rate)
+                    best = (p, br(float(bz)), rate)
             rows.append(dict(kind=kind, eb=eb,
                              fz_bitrate=br_fz, fz_psnr=psnr_fz,
                              cusz_bitrate=br_cz, cusz_psnr=psnr_cz,

@@ -20,7 +20,10 @@ Sections map to the paper:
 collects every section's machine-readable return value (sections returning
 None are recorded as null) into one document — CI writes ``BENCH_ci.json``
 at the repo root and uploads it, the first datapoint of the perf
-trajectory.
+trajectory. The document also embeds a ``metrics_snapshot`` of the
+repro.obs registry (dispatch counters, span histograms, sentinel state) so
+the trajectory carries the telemetry of the run that produced it;
+``--trace-out`` additionally dumps the span event ring as a Chrome trace.
 """
 from __future__ import annotations
 
@@ -42,6 +45,8 @@ def main() -> None:
                    help="tiny shapes / reduced sweeps (CI preset)")
     p.add_argument("--json-out", default=None,
                    help="write all sections' machine-readable results here")
+    p.add_argument("--trace-out", default=None,
+                   help="write the run's span events as Chrome trace JSON")
     args = p.parse_args()
     if args.only:
         todo = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -67,13 +72,22 @@ def main() -> None:
             raise
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
 
+    from repro import obs
     if args.json_out:
+        snap = obs.snapshot()
+        snap["sentinel_violations"] = obs.violations()
         doc = {"meta": {"smoke": args.smoke, "sections": todo,
                         "unix_time": int(time.time())},
-               "sections": results}
+               "sections": results,
+               "metrics_snapshot": snap}
         with open(args.json_out, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json_out}", flush=True)
+    if args.trace_out:
+        obs.write_chrome_trace(args.trace_out,
+                               metadata={"smoke": args.smoke,
+                                         "sections": todo})
+        print(f"# wrote {args.trace_out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,8 @@ def main():
         mid = f.shape[0] // 2
         ssim = float(metrics.ssim2d(f[mid], rec[mid])) if f.ndim == 3 else float("nan")
         cr = float(c.compression_ratio())
-        print(f"{eb:.0e},{cr:.2f},{32 / cr:.2f},"
+        br = float(metrics.bitrate(c.raw_bytes(), c.used_bytes(), f.dtype))
+        print(f"{eb:.0e},{cr:.2f},{br:.2f},"
               f"{float(metrics.psnr(f, rec)):.2f},{ssim:.4f},"
               f"{float(metrics.max_abs_err(f, rec)):.3e},{float(c.eb_abs):.3e}")
 

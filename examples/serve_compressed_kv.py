@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import zoo
+from repro.obs import cli as obs_cli
 from repro.serve import Engine, PoolConfig
 from repro.serve.kvpool import TraceGenConfig, generate, latency_summary
 
@@ -70,7 +71,9 @@ def main():
                     help="route decode through the Pallas flash-decode kernel "
                          "(page-native gather) and FZ through the kernel "
                          "stages — interpret mode off-TPU")
+    obs_cli.add_args(ap)
     args = ap.parse_args()
+    obs_cli.start(args)
 
     cfg, pool_cfg, tg, max_batch = build(args.smoke, args.kernels)
     model = zoo.build(cfg)
@@ -132,6 +135,21 @@ def main():
           f"(per request: {[f'{a:.2f}' for a in agrees]})")
     print("sample continuation (pooled):", outputs[reqs[0].req_id][:10])
     assert mean_agree >= 0.9, f"shared decode diverged from oracle: {agrees}"
+
+    # telemetry cross-checks: the registry's eager FZ dispatch counts must
+    # agree exactly with the pool's own accounting, and the run must finish
+    # with zero error-bound sentinel violations
+    snap = obs.snapshot()
+    fz_decomp = sum(v for k, v in snap["counters"].items()
+                    if k.startswith("fz_dispatches{op=decompress,"))
+    assert fz_decomp == stats.decompress_dispatches, (
+        f"fz decompress dispatches {fz_decomp} != pool "
+        f"{stats.decompress_dispatches}")
+    assert not obs.violations(), f"sentinel violations: {obs.violations()}"
+    print(f"telemetry: {fz_decomp} fz decompress dispatches == pool "
+          f"accounting; 0 sentinel violations")
+    obs_cli.finish(args, metadata={"arch": cfg.arch_id,
+                                   "mode": "serve-prefix-shared"})
 
 
 if __name__ == "__main__":

@@ -24,7 +24,26 @@ case "$tier" in
     # drives the full continuous-batching scheduler (admit/tier/preempt/
     # resume) AND the prefix-sharing path (radix hits, suffix prefill, CoW,
     # deduped shared cold reads) on every PR; asserts hits/CoW/preemptions
-    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke
+    # plus (in-script) fz-vs-pool dispatch-count parity and zero sentinel
+    # violations, and exports the serving telemetry as a Chrome trace
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke \
+        --trace-out /tmp/serve_smoke_trace.json
+    # the exported trace must be a Perfetto-loadable Chrome trace with the
+    # engine -> scheduler -> kvpool -> fz span nesting intact
+    python - <<'PY'
+import json
+doc = json.load(open("/tmp/serve_smoke_trace.json"))
+evs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+assert evs, "empty trace"
+for e in evs:
+    assert {"name", "cat", "ph", "ts", "dur", "pid", "tid"} <= set(e), e
+names = {e["name"] for e in evs}
+for expect in ("engine.serve", "sched.step", "fz.compress"):
+    assert any(n.startswith(expect) for n in names), f"missing {expect} spans"
+parents = {e["args"].get("parent") for e in evs if e["name"] == "sched.step"}
+assert "engine.serve" in parents, "sched.step not nested under engine.serve"
+print(f"serve smoke trace OK: {len(evs)} events, {len(names)} span names")
+PY
     # kernel-parity smoke: the same trace end-to-end through the
     # interpret-mode Pallas flash-decode kernel (page-native gather) + FZ
     # kernel stages; asserts >= 90% token agreement with the oracle
@@ -73,11 +92,28 @@ for r in srows:
     for f in ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
               "ttft_slo_attained", "itl_slo_attained"):
         assert f in r, f"serving row {r['mode']} missing {f}"
+# telemetry: the embedded registry snapshot must be schema-complete, carry
+# the FZ dispatch counters the run produced, and report zero sentinel
+# violations; the eager-wrapper instrumentation overhead is pinned < 5%
+snap = doc["metrics_snapshot"]
+assert {"counters", "gauges", "histograms", "sentinel_violations"} <= set(snap)
+assert any(k.startswith("fz_dispatches{") for k in snap["counters"]), \
+    "no FZ dispatch counters in metrics_snapshot"
+assert any(k.startswith("span_ms{") for k in snap["histograms"]), \
+    "no span histograms in metrics_snapshot"
+for k, h in snap["histograms"].items():
+    assert {"count", "sum", "min", "max", "p50", "p99"} <= set(h), k
+assert not snap["sentinel_violations"], snap["sentinel_violations"]
+oh = doc["sections"]["throughput"]["obs_overhead"]
+assert oh["overhead_frac"] < 0.05, \
+    f"obs overhead {oh['overhead_frac']:.1%} exceeds the 5% pin"
 print(f"BENCH_ci.json OK: sections={sorted(doc['sections'])}, "
       f"{len(rows)} overlap rows, {len(trows)} compressor rows, "
       f"{len(srows)} serving rows "
       f"(radix {radix['prefill_tokens']} vs off {off['prefill_tokens']} "
-      f"prefill tokens)")
+      f"prefill tokens); obs overhead {oh['overhead_frac']:.2%}, "
+      f"{sum(1 for k in snap['counters'] if k.startswith('fz_dispatches'))} "
+      f"fz dispatch counters, 0 sentinel violations")
 PY
     ;;
   all)  exec python -m pytest -q ;;

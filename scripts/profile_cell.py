@@ -6,6 +6,11 @@
 
 This is the §Perf "profile" on a CPU-only box: the lowered-and-partitioned
 HLO is the ground truth for what moves and what multiplies.
+
+Phases run under repro.obs spans (``profile.build`` / ``profile.compile`` /
+``profile.attribute``), so the script doubles as a telemetry exerciser: a
+phase-timing StepReport prints at the end, and ``--trace-out`` /
+``--metrics-out`` / ``--profile-dir`` export the run's artifacts.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -23,16 +28,24 @@ def main():
     p.add_argument("--opt", default="none")
     p.add_argument("--microbatches", type=int, default=1)
     p.add_argument("--top", type=int, default=12)
+    from repro.obs import cli as obs_cli
+    obs_cli.add_args(p)
     args = p.parse_args()
+    obs_cli.start(args)
 
+    from repro import obs
     from repro.launch.dryrun import _build
     from repro.launch import hlo_cost as hc
 
-    model, mesh, step, sargs = _build(args.arch, args.shape, args.mesh == "multi",
-                                      compressed_grads=args.compressed_grads,
-                                      microbatches=args.microbatches, opt=args.opt)
-    text = step.lower(*sargs).compile().as_text()
-    comps = hc.parse_computations(text)
+    with obs.span("profile.build", arch=args.arch, shape=args.shape):
+        model, mesh, step, sargs = _build(
+            args.arch, args.shape, args.mesh == "multi",
+            compressed_grads=args.compressed_grads,
+            microbatches=args.microbatches, opt=args.opt)
+    with obs.span("profile.compile"):
+        text = step.lower(*sargs).compile().as_text()
+    with obs.span("profile.parse"):
+        comps = hc.parse_computations(text)
     entry = [n for n in comps if n.startswith("main")][0]
 
     edges = defaultdict(list)
@@ -96,6 +109,12 @@ def main():
     print(f"\n== dots (traffic {total_bytes:.3e} B, flops {total_flops:.3e}) ==")
     for t in sorted(dots, key=lambda x: -x[0])[: args.top]:
         print(f"{t[0]:11.3e}B flops={t[1]:9.3e} mult={t[2]:7.0f} {t[3]}  @{t[4]}")
+
+    # phase timings (build / compile / parse) from the span histograms
+    print()
+    print(obs.step_report(meta={"arch": args.arch, "shape": args.shape,
+                                "mesh": args.mesh}).render())
+    obs_cli.finish(args, metadata={"arch": args.arch, "shape": args.shape})
 
 
 if __name__ == "__main__":

@@ -27,6 +27,19 @@ Three execution paths, selected by ``FZConfig.use_kernels`` /
 
 All three produce bit-identical containers and reconstructions (pinned by
 the three-way property suite in tests/test_fz_properties.py).
+
+Telemetry: the public entry points are thin eager wrappers over the jitted
+pipelines. When called eagerly they bump ``fz_dispatches{op=...}`` counters
+and compressed-stream size histograms in :mod:`repro.obs` and open an
+``fz.<op>`` span; when reached from inside an enclosing trace they fall
+straight through to the jitted inner (a trace is not a dispatch — counting
+there would tally compilations, not work). The batched page entry points
+(``compress_batch_with_eb`` / ``decompress_batch``) live here for the same
+reason: one vmapped launch is one dispatch, and keeping the counting next to
+the launch is what lets the kvpool's ``decompress_dispatches`` stat and the
+fz-level dispatch counter agree exactly. ``decompress_unmetered`` bypasses
+the counters — it exists for the error-bound sentinels, whose sampled
+roundtrip checks must not pollute the dispatch accounting they audit.
 """
 from __future__ import annotations
 
@@ -36,6 +49,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from . import encode as enc
 from . import quant, shuffle
@@ -141,12 +156,17 @@ def _stages(cfg: FZConfig):
         from repro.kernels import ops as kops
         return kops.lorenzo_quantize, kops.bitshuffle_flag_encode, kops.bitunshuffle
     def ref_quant(data, eb, *, code_mode, outlier_capacity):
-        return quant.dual_quantize(data, eb, code_mode=code_mode,
-                                   outlier_capacity=outlier_capacity)
+        with obs.span("fz.stage.quantize", backend="reference"):
+            return quant.dual_quantize(data, eb, code_mode=code_mode,
+                                       outlier_capacity=outlier_capacity)
     def ref_shuffle_encode(codes_flat, *, capacity):
-        shuffled = shuffle.bitshuffle(codes_flat)
-        return enc.encode(shuffled, capacity=capacity)
-    return ref_quant, ref_shuffle_encode, shuffle.bitunshuffle
+        with obs.span("fz.stage.shuffle_encode", backend="reference"):
+            shuffled = shuffle.bitshuffle(codes_flat)
+            return enc.encode(shuffled, capacity=capacity)
+    def ref_unshuffle(words_flat):
+        with obs.span("fz.stage.unshuffle", backend="reference"):
+            return shuffle.bitunshuffle(words_flat)
+    return ref_quant, ref_shuffle_encode, ref_unshuffle
 
 
 def _source_dtype_name(data: jax.Array) -> str:
@@ -161,20 +181,53 @@ def _source_dtype_name(data: jax.Array) -> str:
         else "float32"
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
-    """Error-bounded lossy compression of a 1-3D float array.
+def _path(cfg: FZConfig) -> str:
+    """Execution-path label for metrics/spans."""
+    if _fused(cfg):
+        return "fused"
+    return "staged" if cfg.use_kernels else "reference"
 
-    The source dtype is recorded in the container (``dtype_name``) for byte
-    accounting; the quantization math itself always runs in float32.
-    """
+
+def _count_dispatch(op: str, cfg: FZConfig, out: FZCompressed | None = None) -> None:
+    """One eager jit launch = one dispatch. Callers gate on
+    ``jax.core.trace_state_clean()`` so traces are never tallied as work."""
+    obs.counter("fz_dispatches", op=op, path=_path(cfg)).inc()
+    if out is not None:
+        obs.histogram("fz_raw_bytes", op=op).observe(out.raw_bytes())
+        obs.histogram("fz_wire_bytes", op=op).observe(out.wire_bytes())
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _compress_jit(data: jax.Array, cfg: FZConfig) -> FZCompressed:
     dtype_name = _source_dtype_name(data)
     data = data.astype(jnp.float32)
     eb = resolve_eb(data, cfg)
     return _compress_core(data, eb, cfg, dtype_name)
 
 
+def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
+    """Error-bounded lossy compression of a 1-3D float array.
+
+    The source dtype is recorded in the container (``dtype_name``) for byte
+    accounting; the quantization math itself always runs in float32.
+    """
+    if not jax.core.trace_state_clean():
+        return _compress_jit(data, cfg)
+    with obs.span("fz.compress", n=int(data.size), path=_path(cfg)):
+        out = _compress_jit(data, cfg)
+    _count_dispatch("compress", cfg, out)
+    return out
+
+
 @partial(jax.jit, static_argnames=("cfg",))
+def _compress_with_eb_jit(data: jax.Array, eb_abs: jax.Array,
+                          cfg: FZConfig) -> FZCompressed:
+    dtype_name = _source_dtype_name(data)
+    data = data.astype(jnp.float32)
+    eb = jnp.maximum(jnp.asarray(eb_abs, jnp.float32), jnp.float32(1e-30))
+    return _compress_core(data, eb, cfg, dtype_name)
+
+
 def compress_with_eb(data: jax.Array, eb_abs: jax.Array, cfg: FZConfig) -> FZCompressed:
     """Compress with a caller-supplied *absolute* error bound (traced scalar).
 
@@ -185,10 +238,12 @@ def compress_with_eb(data: jax.Array, eb_abs: jax.Array, cfg: FZConfig) -> FZCom
     ``eb_abs`` is traced (not baked into ``cfg``), all same-shaped pages share
     a single jit trace.
     """
-    dtype_name = _source_dtype_name(data)
-    data = data.astype(jnp.float32)
-    eb = jnp.maximum(jnp.asarray(eb_abs, jnp.float32), jnp.float32(1e-30))
-    return _compress_core(data, eb, cfg, dtype_name)
+    if not jax.core.trace_state_clean():
+        return _compress_with_eb_jit(data, eb_abs, cfg)
+    with obs.span("fz.compress", n=int(data.size), path=_path(cfg)):
+        out = _compress_with_eb_jit(data, eb_abs, cfg)
+    _count_dispatch("compress", cfg, out)
+    return out
 
 
 def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig,
@@ -216,8 +271,7 @@ def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig,
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def decompress(c: FZCompressed, cfg: FZConfig) -> jax.Array:
-    """Inverse pipeline: decode -> bit-unshuffle -> inverse Lorenzo -> dequant."""
+def _decompress_jit(c: FZCompressed, cfg: FZConfig) -> jax.Array:
     if _fused(cfg):
         from repro.kernels import ops as kops
         return kops.fused_decompress(
@@ -234,10 +288,69 @@ def decompress(c: FZCompressed, cfg: FZConfig) -> jax.Array:
                                  outlier_idx=oidx, outlier_val=oval)
 
 
+def decompress(c: FZCompressed, cfg: FZConfig) -> jax.Array:
+    """Inverse pipeline: decode -> bit-unshuffle -> inverse Lorenzo -> dequant."""
+    if not jax.core.trace_state_clean():
+        return _decompress_jit(c, cfg)
+    with obs.span("fz.decompress", n=c.n, path=_path(cfg)):
+        out = _decompress_jit(c, cfg)
+    _count_dispatch("decompress", cfg)
+    return out
+
+
+def decompress_unmetered(c: FZCompressed, cfg: FZConfig) -> jax.Array:
+    """``decompress`` without dispatch counting/spans — for the error-bound
+    sentinels' sampled roundtrip checks, which must not perturb the dispatch
+    accounting they audit (same compiled program, bit-identical output)."""
+    return _decompress_jit(c, cfg)
+
+
 def roundtrip(data: jax.Array, cfg: FZConfig):
     """compress + decompress; returns (reconstruction, container)."""
     c = compress(data, cfg)
     return decompress(c, cfg), c
+
+
+# ---------------------------------------------------------------------------
+# Batched page entry points (one vmapped launch = one counted dispatch)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _compress_batch_jit(pages_flat, eb_abs, cfg: FZConfig):
+    return jax.vmap(lambda d: _compress_with_eb_jit(d, eb_abs, cfg))(pages_flat)
+
+
+def compress_batch_with_eb(pages_flat: jax.Array, eb_abs: jax.Array,
+                           cfg: FZConfig) -> FZCompressed:
+    """vmap ``compress_with_eb`` over same-shaped rows: one dispatch for the
+    whole set. Elementwise math at a shared traced bound — each row is
+    bit-identical to a single-row ``compress_with_eb`` call. This is the
+    kvpool cold tier's batched park path."""
+    if not jax.core.trace_state_clean():
+        return _compress_batch_jit(pages_flat, eb_abs, cfg)
+    with obs.span("fz.compress_batch", rows=int(pages_flat.shape[0]),
+                  path=_path(cfg)):
+        out = _compress_batch_jit(pages_flat, eb_abs, cfg)
+    _count_dispatch("compress", cfg)
+    obs.histogram("fz_wire_bytes", op="compress").observe(out.wire_bytes())
+    return out
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decompress_batch_jit(comp: FZCompressed, cfg: FZConfig):
+    return jax.vmap(lambda c: _decompress_jit(c, cfg))(comp)
+
+
+def decompress_batch(comp: FZCompressed, cfg: FZConfig) -> jax.Array:
+    """vmap ``decompress`` over a leaf-stacked container batch (one counted
+    dispatch) — the kvpool's batched transient cold read."""
+    if not jax.core.trace_state_clean():
+        return _decompress_batch_jit(comp, cfg)
+    with obs.span("fz.decompress_batch", rows=int(comp.payload.shape[0]),
+                  path=_path(cfg)):
+        out = _decompress_batch_jit(comp, cfg)
+    _count_dispatch("decompress", cfg)
+    return out
 
 
 # ---------------------------------------------------------------------------

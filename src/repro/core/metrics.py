@@ -23,9 +23,18 @@ def nrmse(orig: jax.Array, rec: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.mean((orig - rec) ** 2)) / jnp.maximum(rng, 1e-30)
 
 
-def bitrate(raw_bytes: float, compressed_bytes: jax.Array) -> jax.Array:
-    """Average bits per (assumed f32) value."""
-    return 32.0 * compressed_bytes / raw_bytes
+def bitrate(raw_bytes: float, compressed_bytes: jax.Array,
+            dtype=jnp.float32) -> jax.Array:
+    """Average bits per source value.
+
+    ``dtype`` (or an explicit element width via ``itemsize_bits``-style
+    callers) names the *source* element type: a bfloat16 field at the same
+    compressed size costs twice the bits per value of a float32 one.
+    Defaults to float32 — the paper's datasets — so existing call sites are
+    unchanged; pass the real dtype when the source is not f32.
+    """
+    bits = jnp.dtype(dtype).itemsize * 8
+    return bits * compressed_bytes / raw_bytes
 
 
 def _window_mean(x: jax.Array, k: int) -> jax.Array:

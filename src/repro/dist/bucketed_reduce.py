@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core import fz
 from . import compat
 from .compressed_allreduce import (GradCompressionConfig, _compressible,
@@ -160,7 +161,15 @@ def assign_buckets(grads_abstract: Any, cfg: GradCompressionConfig) -> BucketPla
         cur_ns.append(n)
         cur_bytes += wb
     flush()
-    return BucketPlan(buckets=tuple(buckets), bypass=tuple(sorted(bypass)))
+    plan = BucketPlan(buckets=tuple(buckets), bypass=tuple(sorted(bypass)))
+    # analytic wire bytes are known at plan time (the hop itself runs inside
+    # jit, where nothing may be recorded) — publish them as per-bucket gauges
+    # so step_report can join bytes onto the bucket spans without an HLO pass
+    if jax.core.trace_state_clean():
+        obs.gauge("dist_n_buckets").set(plan.n_buckets)
+        for b in plan.buckets:
+            obs.gauge("dist_bucket_wire_bytes", bucket=b.tag).set(b.wire_bytes)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -264,8 +273,11 @@ def _bucket_hop(xs: list[jax.Array], fzc: fz.FZConfig, mesh, tag: str):
         body, mesh=mesh,
         in_specs=tuple(P("pod") for _ in xs),
         out_specs=(tuple(P() for _ in xs), tuple(P("pod") for _ in xs)))
-    # the named scope is what hlo_cost's tag_pattern keys cross-pod bytes on
-    with jax.named_scope(tag):
+    # the span installs a named scope containing the bucket tag — that is
+    # what hlo_cost's tag_pattern keys cross-pod bytes on (and what lets
+    # step_report join dist_bucket_wire_bytes onto this span's timing); the
+    # hop runs under jit, so the span itself is a trace-time no-op
+    with obs.span(f"dist.{tag}", leaves=len(xs)):
         reds, resids = fn(*xs)
     return list(reds), list(resids)
 

@@ -20,6 +20,13 @@ Signature compatibility: the staged wrappers expose the same interfaces as
 the reference stages in repro.core so FZConfig swaps them in transparently
 (see core/fz.py:_stages); the fused wrappers produce whole containers' worth
 of fields per call.
+
+Every stage body runs under an ``obs.span("fz.stage.<name>", backend=...)``.
+These execute while jax is tracing the enclosing fz jit, so they record
+once-per-compilation ``jit-trace`` events (nested, by timestamp, inside the
+eager ``fz.compress``/``fz.decompress`` wrapper span that triggered the
+compile) and the ``named_scope`` lands the stage name in XLA op metadata —
+no runtime footprint in the compiled program.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import encode as _enc
 from repro.core import quant as _quant
 from repro.core import shuffle as _shuffle
@@ -52,6 +60,11 @@ def backend_interpret() -> bool:
 _interpret = backend_interpret  # intra-module shorthand
 
 
+def backend_label() -> str:
+    """Span/metric label for where the kernels execute."""
+    return "interpret" if _interpret() else "tpu"
+
+
 # ---------------------------------------------------------------------------
 # Staged kernel path ("kernel_mode=staged"): per-stage launches, XLA phase 2
 # ---------------------------------------------------------------------------
@@ -66,12 +79,14 @@ def lorenzo_quantize(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_m
     implementation (the shuffle/encode kernels, the hot 70+% of the pipeline
     per paper Fig. 1, still run as kernels).
     """
-    if outlier_capacity > 0:
-        return _quant.dual_quantize(data, eb, code_mode=code_mode,
-                                    outlier_capacity=outlier_capacity)
-    codes = _lq.lorenzo_quant(data, eb, code_mode=code_mode, interpret=_interpret())
-    zero_i = jnp.zeros((0,), jnp.int32)
-    return codes, zero_i, zero_i, jnp.int32(0)
+    with obs.span("fz.stage.quantize", backend=backend_label()):
+        if outlier_capacity > 0:
+            return _quant.dual_quantize(data, eb, code_mode=code_mode,
+                                        outlier_capacity=outlier_capacity)
+        codes = _lq.lorenzo_quant(data, eb, code_mode=code_mode,
+                                  interpret=_interpret())
+        zero_i = jnp.zeros((0,), jnp.int32)
+        return codes, zero_i, zero_i, jnp.int32(0)
 
 
 @partial(jax.jit, static_argnames=("capacity",))
@@ -82,11 +97,12 @@ def bitshuffle_flag_encode(codes_flat: jax.Array, *, capacity: int):
     """
     if codes_flat.size % TILE:
         raise ValueError(f"size {codes_flat.size} not a multiple of TILE={TILE}")
-    tiles = codes_flat.reshape(-1, TILE)
-    shuffled, byteflags = _bsf.bitshuffle_flag(tiles, interpret=_interpret())
-    flags = byteflags.reshape(-1).astype(bool)
-    return _enc.compact_blocks(
-        flags, shuffled.reshape(-1, _enc.BLOCK_WORDS), capacity=capacity)
+    with obs.span("fz.stage.shuffle_encode", backend=backend_label()):
+        tiles = codes_flat.reshape(-1, TILE)
+        shuffled, byteflags = _bsf.bitshuffle_flag(tiles, interpret=_interpret())
+        flags = byteflags.reshape(-1).astype(bool)
+        return _enc.compact_blocks(
+            flags, shuffled.reshape(-1, _enc.BLOCK_WORDS), capacity=capacity)
 
 
 @jax.jit
@@ -99,8 +115,9 @@ def bitshuffle(codes_flat: jax.Array) -> jax.Array:
 @jax.jit
 def bitunshuffle(words_flat: jax.Array) -> jax.Array:
     """Inverse transform kernel, same signature as core.shuffle.bitunshuffle."""
-    tiles = words_flat.reshape(-1, TILE)
-    return _bsf.bitunshuffle_tiles(tiles, interpret=_interpret()).reshape(-1)
+    with obs.span("fz.stage.unshuffle", backend=backend_label()):
+        tiles = words_flat.reshape(-1, TILE)
+        return _bsf.bitunshuffle_tiles(tiles, interpret=_interpret()).reshape(-1)
 
 
 # ---------------------------------------------------------------------------
@@ -121,18 +138,19 @@ def fused_compress_stages(data: jax.Array, eb: jax.Array, *,
     resulting codes — still no shuffled-stream HBM round trip, and the
     strict error bound is preserved (pinned in tests/test_kernels.py).
     """
-    if outlier_capacity > 0:
-        codes, oidx, oval, n_over = _quant.dual_quantize(
-            data, eb, code_mode=code_mode, outlier_capacity=outlier_capacity)
-        flat = _shuffle.pad_to_tiles(codes.reshape(-1))
-        bitflags, payload, nnz = _fc.fused_shuffle_encode(
-            flat, capacity=capacity, interpret=_interpret())
-        return bitflags, payload, nnz, oidx, oval, n_over
-    bitflags, payload, nnz = _fc.fused_compress(
-        data, eb, capacity=capacity, code_mode=code_mode,
-        interpret=_interpret())
-    zero_i = jnp.zeros((0,), jnp.int32)
-    return bitflags, payload, nnz, zero_i, zero_i, jnp.int32(0)
+    with obs.span("fz.stage.fused_compress", backend=backend_label()):
+        if outlier_capacity > 0:
+            codes, oidx, oval, n_over = _quant.dual_quantize(
+                data, eb, code_mode=code_mode, outlier_capacity=outlier_capacity)
+            flat = _shuffle.pad_to_tiles(codes.reshape(-1))
+            bitflags, payload, nnz = _fc.fused_shuffle_encode(
+                flat, capacity=capacity, interpret=_interpret())
+            return bitflags, payload, nnz, oidx, oval, n_over
+        bitflags, payload, nnz = _fc.fused_compress(
+            data, eb, capacity=capacity, code_mode=code_mode,
+            interpret=_interpret())
+        zero_i = jnp.zeros((0,), jnp.int32)
+        return bitflags, payload, nnz, zero_i, zero_i, jnp.int32(0)
 
 
 def fused_decompress(bitflags: jax.Array, payload: jax.Array, eb: jax.Array, *,
@@ -140,7 +158,8 @@ def fused_decompress(bitflags: jax.Array, payload: jax.Array, eb: jax.Array, *,
                      outlier_idx: jax.Array | None = None,
                      outlier_val: jax.Array | None = None) -> jax.Array:
     """One-launch decompress mirroring :func:`fused_compress_stages`."""
-    return _fd.fused_decompress(
-        bitflags, payload, eb, shape=tuple(shape), code_mode=code_mode,
-        outlier_idx=outlier_idx, outlier_val=outlier_val,
-        interpret=_interpret())
+    with obs.span("fz.stage.fused_decompress", backend=backend_label()):
+        return _fd.fused_decompress(
+            bitflags, payload, eb, shape=tuple(shape), code_mode=code_mode,
+            outlier_idx=outlier_idx, outlier_val=outlier_val,
+            interpret=_interpret())

@@ -25,6 +25,8 @@ def main() -> None:
     p.add_argument("--pool-pages", type=int, default=8)
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--cold-after", type=int, default=2)
+    from repro.obs import cli as obs_cli
+    obs_cli.add_args(p)
     args = p.parse_args()
 
     import jax
@@ -39,6 +41,7 @@ def main() -> None:
     model = zoo.build(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
+    obs_cli.start(args)
 
     if args.paged:
         cap = args.page_size * -(-(args.prompt_len + args.tokens + 1)
@@ -61,6 +64,7 @@ def main() -> None:
         print(f"pool high-water {stats.high_water_used_bytes / 1e6:.2f} MB vs "
               f"{stats.high_water_demand_bytes / 1e6:.2f} MB raw demand")
         print("first sequence:", outputs[0])
+        obs_cli.finish(args, metadata={"arch": cfg.arch_id, "mode": "serve-paged"})
         return
 
     batch = {"tokens": jnp.asarray(
@@ -82,6 +86,7 @@ def main() -> None:
         parked = eng.park(cache)
         print(f"KV parked: {cache_bytes(cache)/1e6:.1f} MB -> "
               f"{compressed_cache_bytes(parked)/1e6:.1f} MB")
+    obs_cli.finish(args, metadata={"arch": cfg.arch_id, "mode": "serve"})
 
 
 if __name__ == "__main__":

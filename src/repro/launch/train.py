@@ -65,6 +65,11 @@ def main() -> None:
                    help="wire-byte target per reduce bucket (--overlap-reduce)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-codec", choices=["raw", "fz"], default="raw")
+    # telemetry flags duplicated from repro.obs.cli.add_args: importing
+    # repro.obs pulls in jax, which must wait for the env setup below
+    p.add_argument("--trace-out", default=None, metavar="PATH")
+    p.add_argument("--metrics-out", default=None, metavar="PATH")
+    p.add_argument("--profile-dir", default=None, metavar="DIR")
     args = p.parse_args()
 
     if args.overlap_reduce:
@@ -72,6 +77,7 @@ def main() -> None:
 
     from repro import configs
     from repro.configs.base import SHAPES, ShapeConfig
+    from repro.obs import cli as obs_cli
     from repro.data.tokens import TokenStream
     from repro.dist.compressed_allreduce import GradCompressionConfig
     from repro.launch.mesh import make_local_mesh
@@ -100,9 +106,12 @@ def main() -> None:
     print(f"{cfg.arch_id}: {model.param_count()/1e6:.1f}M params, "
           f"mesh={dict(mesh.shape)}, reduce={reduce_mode}, "
           f"resume_step={trainer.step}")
+    obs_cli.start(args)
     hist = trainer.run(args.steps - trainer.step)
     for m in hist[:: max(len(hist) // 10, 1)]:
         print(f"step {m['step']:5d} loss {m['loss']:.4f} ({m['seconds']:.2f}s)")
+    obs_cli.finish(args, metadata={"arch": cfg.arch_id, "mode": "train",
+                                   "reduce": reduce_mode})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,59 @@
+"""Shared CLI plumbing for telemetry artifacts.
+
+Every launcher (launch/train.py, launch/serve.py, examples, benchmarks)
+grows the same three flags; this module keeps the parser wiring and the
+end-of-run export logic in one place:
+
+  --trace-out PATH     write the span event ring as a Chrome trace_event
+                       JSON (load in Perfetto / chrome://tracing)
+  --metrics-out PATH   dump the metric registry snapshot as JSON
+  --profile-dir DIR    bracket the run with jax.profiler.start_trace /
+                       stop_trace (TensorBoard-loadable XLA profile)
+
+Usage::
+
+    from repro.obs import cli as obs_cli
+    obs_cli.add_args(parser)
+    args = parser.parse_args()
+    obs_cli.start(args)
+    ...                      # run
+    obs_cli.finish(args)     # writes whatever was requested
+"""
+from __future__ import annotations
+
+import json
+
+from . import registry, sentinels, trace
+
+
+def add_args(p) -> None:
+    """Attach the telemetry flags to an argparse parser."""
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write span events as Chrome trace JSON (Perfetto)")
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the metric registry snapshot as JSON")
+    p.add_argument("--profile-dir", default=None, metavar="DIR",
+                   help="capture a jax.profiler trace into DIR")
+
+
+def start(args) -> None:
+    """Begin any capture that must bracket the run (jax profiler)."""
+    if getattr(args, "profile_dir", None):
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
+
+
+def finish(args, *, metadata: dict | None = None) -> None:
+    """Write the requested artifacts; safe to call when no flag was set."""
+    if getattr(args, "profile_dir", None):
+        import jax
+        jax.profiler.stop_trace()
+    if getattr(args, "trace_out", None):
+        trace.write_chrome_trace(args.trace_out, metadata=metadata)
+        print(f"chrome trace -> {args.trace_out}")
+    if getattr(args, "metrics_out", None):
+        snap = registry.snapshot()
+        snap["sentinel_violations"] = sentinels.violations()
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"metrics snapshot -> {args.metrics_out}")

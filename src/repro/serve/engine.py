@@ -23,11 +23,13 @@ and the logit deviation of decode steps running on a reconstructed cache.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import fz
 from repro.models import zoo
 
@@ -132,12 +134,14 @@ class Engine:
         return self._decode_paged is not None and self.pool_cfg.use_kernels
 
     def prefill(self, batch: dict):
-        logits, cache = self._prefill(self.params, batch)
+        with obs.span("engine.prefill"):
+            logits, cache = self._prefill(self.params, batch)
         return logits, cache
 
     def decode_step(self, cache: dict, tokens: jax.Array):
         """One decode step on an explicit cache (the pool's gathered view)."""
-        return self._decode(self.params, cache, tokens)
+        with obs.span("engine.decode_step"):
+            return self._decode(self.params, cache, tokens)
 
     def decode_step_paged(self, pages: dict, tokens: jax.Array):
         """One decode step on the page-native view (``PagePool.gather_pages``).
@@ -148,17 +152,20 @@ class Engine:
         gathered pages."""
         if self._decode_paged is None:
             raise ValueError("model/pool combination has no paged decode")
-        return self._decode_paged(self.params, pages, tokens)
+        with obs.span("engine.decode_step_paged"):
+            return self._decode_paged(self.params, pages, tokens)
 
     # -- whole-cache parking (parity oracle for the pool) ----------------------
 
     def park(self, cache: dict) -> dict:
         """Compress a cache for in-memory parking (request preempted)."""
         assert self.kcfg.enabled
-        return compress_cache(cache, self.kcfg)
+        with obs.span("engine.park"):
+            return compress_cache(cache, self.kcfg)
 
     def resume(self, parked: dict) -> dict:
-        return decompress_cache(parked, self.kcfg)
+        with obs.span("engine.resume"):
+            return decompress_cache(parked, self.kcfg)
 
     def generate(self, batch: dict, n_tokens: int, *, park_between: bool = False):
         """Greedy generation; optionally park/resume the cache each step to
@@ -196,5 +203,12 @@ class Engine:
         """
         pool = pool or self.make_pool()
         batcher = kvpool.ContinuousBatcher(self, pool, max_batch=max_batch)
-        outputs, stats = batcher.run(requests)
+        t0 = time.perf_counter()
+        with obs.span("engine.serve", requests=len(requests)):
+            outputs, stats = batcher.run(requests)
+        dt = time.perf_counter() - t0
+        n_tokens = sum(len(v) for v in outputs.values())
+        obs.gauge("engine_serve_tokens").set(n_tokens)
+        if dt > 0:
+            obs.gauge("engine_serve_tokens_per_s").set(n_tokens / dt)
         return outputs, stats, pool

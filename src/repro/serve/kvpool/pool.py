@@ -67,13 +67,16 @@ numerically), or ``"off"`` (the PR-2 pool: no tree, full prefill always).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import fz
+from repro.obs import sentinels
 
 from .radix import EMPTY_MATCH, PrefixMatch, RadixIndex
 
@@ -166,7 +169,15 @@ class Page:
 
 @dataclasses.dataclass
 class PoolStats:
+    """Point-in-time snapshot of one pool's counters.
+
+    Not a live accumulator: since the obs refactor the single source of truth
+    is the :mod:`repro.obs` registry (metrics labeled ``pool=<instance>``),
+    and ``PagePool.stats`` materializes this view on every read. Parity with
+    the raw registry snapshot is pinned in tests/test_obs_integration.py.
+    """
     compressions: int = 0
+    compress_dispatches: int = 0   # FZ launches issued for parking (batched)
     decompressions: int = 0        # containers actually decoded
     decompress_dispatches: int = 0  # vmapped decode dispatches issued
     cow_promotions: int = 0        # shared-page writes that forked a copy
@@ -177,6 +188,26 @@ class PoolStats:
     high_water_bytes: int = 0      # max raw-slab-in-use + compressed used_bytes
     high_water_demand_bytes: int = 0   # max live physical pages held fully raw
     high_water_logical_bytes: int = 0  # max per-seq mappings held raw + private
+
+
+# maps PoolStats fields to registry metric names (all labeled pool=<id>);
+# (kind, name): counters read .value, gauges read int(.value)
+_POOL_METRICS = {
+    "compressions": ("counter", "kvpool_compressions"),
+    "compress_dispatches": ("counter", "kvpool_compress_dispatches"),
+    "decompressions": ("counter", "kvpool_decompressions"),
+    "decompress_dispatches": ("counter", "kvpool_decompress_dispatches"),
+    "cow_promotions": ("counter", "kvpool_cow_promotions"),
+    "prefix_hit_pages": ("counter", "kvpool_prefix_hit_pages"),
+    "prefix_hit_tokens": ("counter", "kvpool_prefix_hit_tokens"),
+    "shared_cold_reads_deduped": ("counter", "kvpool_shared_cold_reads_deduped"),
+    "high_water_slots": ("gauge", "kvpool_high_water_slots"),
+    "high_water_bytes": ("gauge", "kvpool_high_water_bytes"),
+    "high_water_demand_bytes": ("gauge", "kvpool_high_water_demand_bytes"),
+    "high_water_logical_bytes": ("gauge", "kvpool_high_water_logical_bytes"),
+}
+
+_pool_ids = itertools.count()
 
 
 # ---------------------------------------------------------------------------
@@ -213,20 +244,6 @@ def _write_span(slots, slot, off: int, chunk):
     return slots.at[slot, :, :, off:off + n].set(chunk.astype(slots.dtype))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _compress_pages_batch(pages_flat, eb_abs, cfg: fz.FZConfig):
-    """vmap ``compress_with_eb`` over same-shaped pages: one dispatch for the
-    whole cold set. Elementwise math at a shared traced bound — each row is
-    bit-identical to a single-page ``compress_with_eb`` call."""
-    return jax.vmap(lambda d: fz.compress_with_eb(d, eb_abs, cfg))(pages_flat)
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def _decompress_pages_batch(comp: fz.FZCompressed, cfg: fz.FZConfig):
-    """vmap ``decompress`` over a leaf-stacked container batch."""
-    return jax.vmap(lambda c: fz.decompress(c, cfg))(comp)
-
-
 @partial(jax.jit, static_argnames=("ps", "n_pages"))
 def _paginate(k, v, ps: int, n_pages: int):
     """Chop a prefill cache (L, 1, Smax, KVH, hd) into (P, 2, L, ps, KVH, hd)."""
@@ -258,12 +275,31 @@ class PagePool:
         self._next_page = 0
         self.eb_abs: jax.Array | None = None
         self._fzc = cfg.fz_config()
-        self.stats = PoolStats()
+        # all this pool's metrics carry a per-instance label so several pools
+        # in one process (tests, A/B batchers) never cross-count
+        self._obs_id = f"pool{next(_pool_ids)}"
         self.radix: RadixIndex | None = None
         if cfg.prefix_mode != "off":
             self.radix = RadixIndex(self._ref, self._unref,
                                     min_match=cfg.min_match,
                                     max_cached_pages=cfg.max_cached_pages)
+
+    # -- telemetry ------------------------------------------------------------
+
+    def _count(self, name: str, n: int = 1) -> None:
+        obs.counter(name, pool=self._obs_id).inc(n)
+
+    def _water(self, name: str, v: float) -> None:
+        obs.gauge(name, pool=self._obs_id).max(v)
+
+    @property
+    def stats(self) -> PoolStats:
+        """Derived snapshot of this pool's registry metrics (see PoolStats)."""
+        out = {}
+        for field, (kind, name) in _POOL_METRICS.items():
+            m = obs.DEFAULT.find(name, pool=self._obs_id)
+            out[field] = int(m.value) if m is not None else 0
+        return PoolStats(**out)
 
     # -- geometry / accounting ------------------------------------------------
 
@@ -326,15 +362,12 @@ class PagePool:
     def note_high_water(self) -> None:
         """Sample peaks at allocation/promotion time (the true maxima —
         end-of-step sampling would miss admit-then-park within one step)."""
-        self.stats.high_water_slots = max(
-            self.stats.high_water_slots,
-            self.cfg.num_pages - len(self.free_slots))
-        self.stats.high_water_bytes = max(self.stats.high_water_bytes,
-                                          self.used_bytes())
-        self.stats.high_water_demand_bytes = max(
-            self.stats.high_water_demand_bytes, self.live_demand_bytes())
-        self.stats.high_water_logical_bytes = max(
-            self.stats.high_water_logical_bytes, self.logical_demand_bytes())
+        self._water("kvpool_high_water_slots",
+                    self.cfg.num_pages - len(self.free_slots))
+        self._water("kvpool_high_water_bytes", self.used_bytes())
+        self._water("kvpool_high_water_demand_bytes", self.live_demand_bytes())
+        self._water("kvpool_high_water_logical_bytes",
+                    self.logical_demand_bytes())
 
     # -- error bound ----------------------------------------------------------
 
@@ -396,7 +429,7 @@ class PagePool:
         self.pages[pid] = Page(pid, slot=slot, last_write=step)
         self.seq_pages[seq][idx] = pid
         self._unref(old_pid)
-        self.stats.cow_promotions += 1
+        self._count("kvpool_cow_promotions")
         self.note_high_water()
         return True
 
@@ -454,8 +487,8 @@ class PagePool:
             self.seq_pages[seq] = list(match.pids)
         self.seq_len[seq] = matched
         self.radix.touch(match, step)
-        self.stats.prefix_hit_pages += len(match.pids)
-        self.stats.prefix_hit_tokens += matched
+        self._count("kvpool_prefix_hit_pages", len(match.pids))
+        self._count("kvpool_prefix_hit_tokens", matched)
         self.note_high_water()
         if matched % self.cfg.page_size and self.cfg.prefix_mode != "copy":
             if not self._cow_page(seq, len(match.pids) - 1, step):
@@ -495,12 +528,15 @@ class PagePool:
         page = self.pages[pid]
         if page.slot is None:
             return
-        flat = self.slots[page.slot].reshape(-1)
-        self._ensure_eb(flat)
-        page.comp = fz.compress_with_eb(flat, self.eb_abs, self._fzc)
-        self.free_slots.append(page.slot)
-        page.slot = None
-        self.stats.compressions += 1
+        with obs.span("kvpool.park", pages=1):
+            flat = self.slots[page.slot].reshape(-1)
+            self._ensure_eb(flat)
+            page.comp = fz.compress_with_eb(flat, self.eb_abs, self._fzc)
+            self.free_slots.append(page.slot)
+            page.slot = None
+            self._count("kvpool_compressions")
+            self._count("kvpool_compress_dispatches")
+            self._sentinel_check(flat, page.comp)
 
     def compress_pages(self, pids: list[int]) -> None:
         """Batched raw -> compressed: one vmapped FZ dispatch for the whole
@@ -512,16 +548,36 @@ class PagePool:
             for pid in pids:
                 self.compress_page(pid)
             return
-        flats = jnp.stack([self.slots[self.pages[pid].slot].reshape(-1)
-                           for pid in pids])
-        self._ensure_eb(flats[0])
-        batch = _compress_pages_batch(flats, self.eb_abs, self._fzc)
-        for i, pid in enumerate(pids):
-            page = self.pages[pid]
-            page.comp = jax.tree.map(lambda leaf, i=i: leaf[i], batch)
-            self.free_slots.append(page.slot)
-            page.slot = None
-            self.stats.compressions += 1
+        with obs.span("kvpool.park", pages=len(pids)):
+            flats = jnp.stack([self.slots[self.pages[pid].slot].reshape(-1)
+                               for pid in pids])
+            self._ensure_eb(flats[0])
+            batch = fz.compress_batch_with_eb(flats, self.eb_abs, self._fzc)
+            for i, pid in enumerate(pids):
+                page = self.pages[pid]
+                page.comp = jax.tree.map(lambda leaf, i=i: leaf[i], batch)
+                self.free_slots.append(page.slot)
+                page.slot = None
+                self._count("kvpool_compressions")
+            self._count("kvpool_compress_dispatches")
+            self._sentinel_check(flats[0], jax.tree.map(lambda l: l[0], batch))
+
+    def _sentinel_check(self, flat: jax.Array, comp: fz.FZCompressed) -> None:
+        """Sampled park-time health check: transiently decompress the fresh
+        container (via the unmetered path, so dispatch accounting is not
+        perturbed), verify the error bound, and feed the achieved ratio into
+        the drift EWMA. The device sync this costs is only paid on sampled
+        parks (first, then every Nth — see obs.sentinels.CONFIG)."""
+        if not sentinels.should_check_eb("kv_cold"):
+            return
+        src = flat.astype(jnp.float32)
+        rec = fz.decompress_unmetered(comp, self._fzc)
+        max_err = float(jnp.max(jnp.abs(src - rec)))
+        max_abs = float(jnp.max(jnp.abs(src)))
+        sentinels.check_error_bound("kv_cold", max_err, float(self.eb_abs),
+                                    max_abs)
+        sentinels.note_ratio("kv_cold",
+                             comp.raw_bytes() / max(1.0, float(comp.used_bytes())))
 
     def promote_page(self, pid: int, step: int) -> bool:
         """Compressed -> raw in place (needed before a write to a *private*
@@ -548,16 +604,17 @@ class PagePool:
         reconstruction lands back in the slab dtype the page was built from."""
         if not pages:
             return []
-        self.stats.decompressions += len(pages)
-        self.stats.decompress_dispatches += 1
-        if len(pages) == 1:
-            rec = fz.decompress(pages[0].comp, self._fzc)[None]
-        else:
-            stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                                   *[p.comp for p in pages])
-            rec = _decompress_pages_batch(stacked, self._fzc)
-        return [rec[i].reshape(self.page_shape).astype(self.slots.dtype)
-                for i in range(len(pages))]
+        self._count("kvpool_decompressions", len(pages))
+        self._count("kvpool_decompress_dispatches")
+        with obs.span("kvpool.cold_read", pages=len(pages)):
+            if len(pages) == 1:
+                rec = fz.decompress(pages[0].comp, self._fzc)[None]
+            else:
+                stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                                       *[p.comp for p in pages])
+                rec = fz.decompress_batch(stacked, self._fzc)
+            return [rec[i].reshape(self.page_shape).astype(self.slots.dtype)
+                    for i in range(len(pages))]
 
     def _page_datas(self, pages: list[Page]) -> list[jax.Array]:
         """Contents of a mixed raw/cold page list (cold ones in one batched
@@ -689,26 +746,29 @@ class PagePool:
         fanned out to every reader lane (reading never changes a page's
         tier). Empty lanes are zero-filled at length 0.
         """
-        P = self.cfg.max_pages_per_seq
-        lane_pids = [self.seq_pages.get(seq, []) if seq is not None else []
-                     for seq in lane_seqs]
-        cold_occurrences = [pid for pids in lane_pids for pid in pids
-                            if self.pages[pid].slot is None]
-        cold = list(dict.fromkeys(cold_occurrences))
-        self.stats.shared_cold_reads_deduped += (len(cold_occurrences)
-                                                 - len(cold))
-        cold_data = dict(zip(cold, self._decompress_many(
-            [self.pages[pid] for pid in cold])))
-        lanes = []
-        lengths = []
-        for seq, pids in zip(lane_seqs, lane_pids):
-            tensors = [self.slots[self.pages[pid].slot]
-                       if self.pages[pid].slot is not None else cold_data[pid]
-                       for pid in pids]
-            tensors += [self._zero_page] * (P - len(tensors))
-            lanes.append(jnp.stack(tensors))            # (P, 2, L, ps, KVH, hd)
-            lengths.append(self.seq_len.get(seq, 0) if seq is not None else 0)
-        return jnp.stack(lanes), jnp.asarray(lengths, jnp.int32)
+        obs.gauge("kvpool_lanes", pool=self._obs_id).set(
+            sum(1 for s in lane_seqs if s is not None))
+        with obs.span("kvpool.gather", lanes=len(lane_seqs)):
+            P = self.cfg.max_pages_per_seq
+            lane_pids = [self.seq_pages.get(seq, []) if seq is not None else []
+                         for seq in lane_seqs]
+            cold_occurrences = [pid for pids in lane_pids for pid in pids
+                                if self.pages[pid].slot is None]
+            cold = list(dict.fromkeys(cold_occurrences))
+            self._count("kvpool_shared_cold_reads_deduped",
+                        len(cold_occurrences) - len(cold))
+            cold_data = dict(zip(cold, self._decompress_many(
+                [self.pages[pid] for pid in cold])))
+            lanes = []
+            lengths = []
+            for seq, pids in zip(lane_seqs, lane_pids):
+                tensors = [self.slots[self.pages[pid].slot]
+                           if self.pages[pid].slot is not None else cold_data[pid]
+                           for pid in pids]
+                tensors += [self._zero_page] * (P - len(tensors))
+                lanes.append(jnp.stack(tensors))        # (P, 2, L, ps, KVH, hd)
+                lengths.append(self.seq_len.get(seq, 0) if seq is not None else 0)
+            return jnp.stack(lanes), jnp.asarray(lengths, jnp.int32)
 
     def gather(self, lane_seqs: list[int | None]):
         """Assemble the fixed-width contiguous decode cache for a set of lanes.

@@ -37,10 +37,14 @@ request for the SLO accounting in ``tracegen.latency_summary``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
+from repro.obs import sentinels
 
 from .policy import TieredPolicy
 from .pool import PagePool
@@ -73,6 +77,14 @@ class SeqRecord:
 
 @dataclasses.dataclass
 class TraceStats:
+    """Point-in-time snapshot of one batcher's serving counters.
+
+    Like ``PoolStats``, no longer a live accumulator: the scheduler's
+    counters live in the :mod:`repro.obs` registry (labeled
+    ``batcher=<instance>``) and ``ContinuousBatcher.stats`` materializes
+    this view — pool-derived fields straight from the pool's own snapshot,
+    per-request latency dicts from plain batcher attrs.
+    """
     decode_steps: int = 0
     admissions: int = 0
     preemptions: int = 0
@@ -94,6 +106,22 @@ class TraceStats:
     # latency (scheduler steps), per req_id — joined with SLOs in tracegen
     ttft_steps: dict[int, int] = dataclasses.field(default_factory=dict)
     itl_steps: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+
+
+# TraceStats fields backed by per-batcher registry counters
+_SCHED_METRICS = {
+    "decode_steps": "sched_decode_steps",
+    "admissions": "sched_admissions",
+    "preemptions": "sched_preemptions",
+    "resumes": "sched_resumes",
+    "completed": "sched_completed",
+    "tiered_pages": "sched_tiered_pages",
+    "prefix_hits": "sched_prefix_hits",
+    "prefill_tokens": "sched_prefill_tokens",
+    "prefill_tokens_saved": "sched_prefill_tokens_saved",
+}
+
+_batcher_ids = itertools.count()
 
 
 @jax.jit
@@ -126,7 +154,35 @@ class ContinuousBatcher:
                        and callable(getattr(engine, "prefill_suffix", None)))
         self.lanes: list[int | None] = [None] * max_batch
         self.recs: dict[int, SeqRecord] = {}
-        self.stats = TraceStats()
+        self._obs_id = f"batcher{next(_batcher_ids)}"
+        self._ttft_steps: dict[int, int] = {}
+        self._itl_steps: dict[int, list[int]] = {}
+
+    # -- telemetry ------------------------------------------------------------
+
+    def _count(self, name: str, n: int = 1) -> None:
+        obs.counter(name, batcher=self._obs_id).inc(n)
+
+    @property
+    def stats(self) -> TraceStats:
+        """Derived snapshot: registry counters + the pool's own snapshot."""
+        vals = {}
+        for field, name in _SCHED_METRICS.items():
+            m = obs.DEFAULT.find(name, batcher=self._obs_id)
+            vals[field] = int(m.value) if m is not None else 0
+        ps = self.pool.stats
+        return TraceStats(
+            **vals,
+            high_water_used_bytes=ps.high_water_bytes,
+            high_water_demand_bytes=ps.high_water_demand_bytes,
+            high_water_logical_bytes=ps.high_water_logical_bytes,
+            pool_compressions=ps.compressions,
+            pool_decompressions=ps.decompressions,
+            cow_promotions=ps.cow_promotions,
+            shared_cold_reads_deduped=ps.shared_cold_reads_deduped,
+            decompress_dispatches=ps.decompress_dispatches,
+            ttft_steps=dict(self._ttft_steps),
+            itl_steps={k: list(v) for k, v in self._itl_steps.items()})
 
     # -- bookkeeping ----------------------------------------------------------
 
@@ -148,7 +204,7 @@ class ContinuousBatcher:
         self.policy.park(self.pool, seq)
         self.lanes[rec.lane] = None
         rec.lane, rec.state = None, PARKED
-        self.stats.preemptions += 1
+        self._count("sched_preemptions")
 
     def _emit(self, rec: SeqRecord, tok: int, step: int) -> None:
         """Record one generated token + its latency sample."""
@@ -163,13 +219,13 @@ class ContinuousBatcher:
         rec = self.recs[seq]
         outputs[rec.req.req_id] = np.asarray(rec.generated[: rec.req.n_new],
                                              np.int32)
-        self.stats.ttft_steps[rec.req.req_id] = rec.ttft
-        self.stats.itl_steps[rec.req.req_id] = rec.itl[: rec.req.n_new - 1]
+        self._ttft_steps[rec.req.req_id] = rec.ttft
+        self._itl_steps[rec.req.req_id] = rec.itl[: rec.req.n_new - 1]
         self.pool.free_seq(seq)
         if rec.lane is not None:
             self.lanes[rec.lane] = None
         rec.lane, rec.state = None, FINISHED
-        self.stats.completed += 1
+        self._count("sched_completed")
 
     def _preempt_for(self, step: int, *, admitting_priority: int | None = None) -> bool:
         """Park the policy victim to relieve pressure; returns True if parked.
@@ -200,7 +256,7 @@ class ContinuousBatcher:
         self._emit(rec, int(jnp.argmax(logits[0])), step)
         rec.lane, rec.state, rec.arrival = lane, RUNNING, step
         self.lanes[lane] = seq
-        self.stats.admissions += 1
+        self._count("sched_admissions")
         if len(rec.generated) >= rec.req.n_new:
             self._finish(seq, outputs)
 
@@ -228,7 +284,7 @@ class ContinuousBatcher:
             return False
         if self.prefix:
             self.pool.insert_prompt(seq, prompt, step)
-        self.stats.prefill_tokens += len(prompt)
+        self._count("sched_prefill_tokens", len(prompt))
         self._start_running(rec, logits, step, outputs)
         return True
 
@@ -261,9 +317,9 @@ class ContinuousBatcher:
             self.pool.free_seq(seq)
             return False
         self.pool.insert_prompt(seq, prompt, step)
-        self.stats.prefix_hits += 1
-        self.stats.prefill_tokens += len(suffix)
-        self.stats.prefill_tokens_saved += matched
+        self._count("sched_prefix_hits")
+        self._count("sched_prefill_tokens", len(suffix))
+        self._count("sched_prefill_tokens_saved", matched)
         self._start_running(rec, logits, step, outputs)
         return True
 
@@ -274,7 +330,7 @@ class ContinuousBatcher:
         lane = self._free_lane()
         rec.lane, rec.state = lane, RUNNING
         self.lanes[lane] = seq
-        self.stats.resumes += 1
+        self._count("sched_resumes")
         return True
 
     # -- the step -------------------------------------------------------------
@@ -295,10 +351,14 @@ class ContinuousBatcher:
 
     def step(self, step: int, outputs: dict) -> bool:
         """One scheduler iteration; returns True if any progress was made."""
+        with obs.span("sched.step", step=step):
+            return self._step(step, outputs)
+
+    def _step(self, step: int, outputs: dict) -> bool:
         progress = False
         # 1. routine cooling
-        self.stats.tiered_pages += self.policy.tier(self.pool, step,
-                                                    self._protect())
+        self._count("sched_tiered_pages",
+                    self.policy.tier(self.pool, step, self._protect()))
         # 2. resume parked: highest priority, oldest, then req_id
         for rec in sorted((r for r in self.recs.values() if r.state == PARKED),
                           key=lambda r: (-r.req.priority, r.arrival,
@@ -349,13 +409,19 @@ class ContinuousBatcher:
                 self._emit(rec, int(jnp.argmax(logits[lane])), step)
                 if len(rec.generated) >= rec.req.n_new:
                     self._finish(seq, outputs)
-            self.stats.decode_steps += 1
+            self._count("sched_decode_steps")
             progress = True
-        # 6. accounting: the pool samples peaks at alloc/promote time (the
-        # true maxima); mirror them into the trace stats
-        self.stats.high_water_used_bytes = self.pool.stats.high_water_bytes
-        self.stats.high_water_demand_bytes = self.pool.stats.high_water_demand_bytes
-        self.stats.high_water_logical_bytes = self.pool.stats.high_water_logical_bytes
+        # 6. health: queue-depth/starvation gauges for the sentinels, then the
+        # per-step health gate (raises on any error-bound violation)
+        waiting = [r for r in self.recs.values()
+                   if r.state == WAITING and r.req.arrive_at <= step]
+        sentinels.note_scheduler(
+            waiting=len(waiting),
+            running=sum(1 for r in self.recs.values() if r.state == RUNNING),
+            parked=sum(1 for r in self.recs.values() if r.state == PARKED),
+            oldest_wait_steps=max((step - r.req.arrive_at for r in waiting),
+                                  default=0))
+        sentinels.assert_healthy()
         return progress
 
     def run(self, requests: list[Request]) -> tuple[dict[int, np.ndarray],
@@ -403,12 +469,7 @@ class ContinuousBatcher:
                     f"{len(self.recs)} requests)")
         if not all(r.state == FINISHED for r in self.recs.values()):
             raise RuntimeError("kvpool scheduler exceeded max_steps")
-        # end-of-trace drain: the radix cache's page references go last
+        # end-of-trace drain: the radix cache's page references go last;
+        # the stats property folds the pool's counters in on every read
         self.pool.release_prefix_cache()
-        self.stats.pool_compressions = self.pool.stats.compressions
-        self.stats.pool_decompressions = self.pool.stats.decompressions
-        self.stats.cow_promotions = self.pool.stats.cow_promotions
-        self.stats.shared_cold_reads_deduped = (
-            self.pool.stats.shared_cold_reads_deduped)
-        self.stats.decompress_dispatches = self.pool.stats.decompress_dispatches
         return outputs, self.stats

@@ -22,9 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt import checkpoint as ckpt
 from repro.data.tokens import TokenStream
 from repro.models import zoo
+from repro.obs import sentinels
 from repro.optim import adamw_init
 from .step import TrainConfig, build_train_step
 
@@ -120,15 +122,22 @@ class Trainer:
         return {"tokens": jnp.asarray(arr[:, :-1]), "labels": jnp.asarray(arr[:, 1:])}
 
     def run(self, n_steps: int, *, delay_injector: Callable[[int], float] | None = None):
+        tokens_per_batch = None
         for _ in range(n_steps):
             t0 = time.perf_counter()
-            batch = self._batch(self.step)
-            self.params, self.opt, self.err, metrics = self.step_fn(
-                self.params, self.opt, self.err, jnp.int32(self.step), batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            with obs.span("train.step", step=self.step):
+                batch = self._batch(self.step)
+                self.params, self.opt, self.err, metrics = self.step_fn(
+                    self.params, self.opt, self.err, jnp.int32(self.step), batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
             if delay_injector is not None:
                 time.sleep(delay_injector(self.step))
             dt = time.perf_counter() - t0
+            if tokens_per_batch is None:
+                tokens_per_batch = int(batch["tokens"].size)
+            obs.gauge("train_tokens_per_s").set(tokens_per_batch / max(dt, 1e-9))
+            obs.counter("train_steps").inc()
+            sentinels.assert_healthy()
             ev = self.watchdog.observe(self.step, dt)
             metrics.update(step=self.step, seconds=dt,
                            straggler=bool(ev))
