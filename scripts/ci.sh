@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI entry point: `scripts/ci.sh fast|slow|bench|all` (default fast).
+# CI entry point: `scripts/ci.sh fast|slow|bench|analyze|all` (default fast).
 #
 # XLA flags are pinned so the fake-device tests are deterministic: the main
 # pytest process keeps a single CPU device (tests/test_dist.py spawns its own
@@ -13,6 +13,10 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=1}"
 tier="${1:-fast}"
 case "$tier" in
   fast)
+    # static analysis gates first: cheapest tier, catches kernel budget /
+    # carry / jit-discipline regressions before any interpret-mode kernel
+    # spins up
+    bash "$0" analyze
     # property tier: prefer the real hypothesis wheel (pyproject [test]
     # extra); hermetic boxes fall back to the bundled minihypothesis shim
     # (tests/conftest.py), so the tier runs either way
@@ -50,6 +54,21 @@ PY
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke --kernels
     ;;
   slow) exec python -m pytest -q -m slow ;;
+  analyze)
+    # static-analysis tier: kernel VMEM/SMEM budgets over the shipped config
+    # space, grid-carry vs dimension_semantics hazards, jit-discipline +
+    # style lint — fails on any finding not in the committed allowlist
+    # (src/repro/analysis/baseline.json) and on stale allowlist entries
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis --check
+    # the full lint config is [tool.ruff] in pyproject.toml; the wheel is
+    # optional — the analyzer's built-in style pass above is the hermetic
+    # lint floor either way
+    if command -v ruff >/dev/null 2>&1; then
+      ruff check src tests
+    else
+      echo "ruff wheel unavailable; built-in style pass is the lint floor"
+    fi
+    ;;
   bench)
     # perf-trajectory smoke: tiny-shape kvcache decode, the barrier-vs-
     # bucketed overlap sweep, AND compressor throughput (compress/decompress
@@ -117,5 +136,5 @@ print(f"BENCH_ci.json OK: sections={sorted(doc['sections'])}, "
 PY
     ;;
   all)  exec python -m pytest -q ;;
-  *)    echo "usage: $0 [fast|slow|bench|all]" >&2; exit 2 ;;
+  *)    echo "usage: $0 [fast|slow|bench|analyze|all]" >&2; exit 2 ;;
 esac

@@ -1,0 +1,40 @@
+"""repro.analysis — static kernel-resource + jit-discipline analyzer.
+
+Three passes and one reporting spine, all dependency-free (stdlib + the
+repo's own geometry helpers; no jax execution):
+
+  * **resources** (:mod:`.resources`): evaluates every registered
+    :class:`~.kernelspec.KernelSpec` over the shipped config space
+    (:mod:`.space`) and computes per-grid-step VMEM/SMEM footprints with
+    dtype-aware TPU tile padding (f32 (8,128), bf16 (16,128), int8/u8
+    (32,128) sublane rules, 128-lane trailing axis, pipeline
+    double-buffering for varying blocks). Budget overflows and lane
+    under-fills become findings — the known megakernel capacity-payload
+    blow-up and the ps<128 paged-decode under-fill are *tracked* entries in
+    ``baseline.json`` instead of folklore. Also cross-checks
+    ``lorenzo_quant.band_for`` against the footprint model.
+  * **carry** (:mod:`.carry`): a race detector for the sequential-grid
+    scratch pipeline. Classifies each scratch ref (and revisited output
+    block) of a kernel body as cross-step carry vs per-step via AST
+    inspection, then asserts carry ⇒ ``dimension_semantics`` declares the
+    carried axes ``"arbitrary"`` — the exact bug class the fused
+    megakernels' SMEM running-offset depends on.
+  * **jitlint** (:mod:`.jitlint`): an AST linter over ``src/repro`` flagging
+    Python-level branching on traced values, host/np calls inside jitted
+    bodies, unknown or unhashable static args, and eager-only ``obs``
+    metric calls reachable from inside a trace — the pre-merge twin of the
+    runtime ``span_traces`` retrace detector. A small style pass (unused
+    imports, F401-style) rides along so the tree lints clean even where the
+    ruff wheel is unavailable.
+
+``python -m repro.analysis`` runs everything and renders findings as human
+text or JSON; ``--check`` fails on any finding not in the committed
+allowlist ``baseline.json`` (known-accepted findings are explicit, new ones
+fail CI — wired as ``scripts/ci.sh analyze``).
+
+This package intentionally imports nothing heavy at package level:
+:mod:`repro.kernels` imports :mod:`.kernelspec` to declare its specs, so the
+passes live in submodules and are imported lazily (via ``__main__``/tests).
+"""
+from .kernelspec import (BlockDecl, KernelSpec,  # noqa: F401
+                         ScratchDecl, register_spec, spec_builders)

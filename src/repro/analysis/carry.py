@@ -1,0 +1,220 @@
+"""Grid-carry hazard detector: carry ⇒ sequential grid, statically.
+
+The fused megakernels thread state across grid steps — the SMEM running
+payload offset, the right-aligned VMEM code carry, the inverse-Lorenzo
+row carry — which is only sound because the TPU grid executes
+*sequentially* when every axis is declared ``dimension_semantics
+("arbitrary",)``. Mark an axis ``"parallel"`` (or leave semantics to
+compiler defaults) and the same kernel silently miscompiles: steps race on
+the scratch and the payload offsets interleave. This pass turns that prose
+invariant into a checked one.
+
+Classification is by AST inspection of the kernel body (``KernelSpec.
+kernel_fn``), not by trusting a declared flag:
+
+  * a **scratch ref** is a *carry* if the body reads it (including passing
+    the ref to a helper) before an *unguarded* write — writes inside a
+    ``@pl.when(program_id == 0)`` block are step-0 initialization, so any
+    later-step read sees the previous step's value;
+  * an **output block** whose index map ignores some grid axes (a
+    *revisited* block, per ``probe_index_map``) is a carry across exactly
+    those axes under the same read-before-unguarded-write test — the
+    flash-decode online-softmax accumulators are the canonical case.
+
+Rules:
+
+  * ``carry-under-parallel``  — a carried axis is declared ``"parallel"``;
+  * ``carry-default-semantics`` — the kernel carries state but the call
+    site declares no ``dimension_semantics`` at all (compiler defaults are
+    not a contract);
+  * ``missing-semantics`` (warn) — no carries, but semantics omitted:
+    parallelism should be declared deliberately, not by omission.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+
+from .kernelspec import KernelSpec, probe_index_map
+from .report import Finding
+
+
+def _body_ast(fn) -> ast.FunctionDef | None:
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+    except (OSError, TypeError):
+        return None
+    try:
+        tree = ast.parse(src)
+    except SyntaxError:
+        return None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            return node
+    return None
+
+
+def kernel_param_names(fn_def: ast.FunctionDef, expected: int) -> list[str]:
+    """Positional ref names of a kernel body.
+
+    Handles the ``def kernel(*refs)`` + tuple-unpack idiom (fused_decode):
+    when the body star-packs its refs, the names come from an unpacking
+    assignment ``(a_ref, b_ref, ...) = refs`` whose arity matches
+    ``expected``.
+    """
+    args = [a.arg for a in fn_def.args.args]
+    if fn_def.args.vararg is None:
+        return args
+    var = fn_def.args.vararg.arg
+    for node in ast.walk(fn_def):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Tuple)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == var):
+            names = [e.id for e in node.targets[0].elts
+                     if isinstance(e, ast.Name)]
+            if len(names) == expected:
+                return args + names
+    return args
+
+
+def _is_first_step_guard(dec: ast.expr) -> bool:
+    """True for ``@pl.when(<something> == 0)`` decorators (step-0 init)."""
+    if not (isinstance(dec, ast.Call) and isinstance(dec.func, ast.Attribute)
+            and dec.func.attr == "when"):
+        return False
+    return any(isinstance(a, ast.Compare)
+               and any(isinstance(op, ast.Eq) for op in a.ops)
+               for a in dec.args)
+
+
+class _RefAccess(ast.NodeVisitor):
+    """Orders reads vs unguarded writes of one ref name in a kernel body."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.events: list[str] = []     # "read" | "write" in source order
+        self._guard_depth = 0
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        guarded = any(_is_first_step_guard(d) for d in node.decorator_list)
+        self._guard_depth += guarded
+        self.generic_visit(node)
+        self._guard_depth -= guarded
+
+    def _hits(self, node: ast.expr) -> bool:
+        return isinstance(node, ast.Name) and node.id == self.name
+
+    def visit_Subscript(self, node: ast.Subscript):
+        if self._hits(node.value):
+            if isinstance(node.ctx, ast.Store):
+                if not self._guard_depth:
+                    self.events.append("write")
+            else:
+                self.events.append("read")
+            # the inner Name is this same access, not a separate read
+            self.visit(node.slice)
+            return
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        # ref[i] += x  is a read-modify-write: the read happens first
+        tgt = node.target
+        if isinstance(tgt, ast.Subscript) and self._hits(tgt.value):
+            self.events.append("read")
+            if not self._guard_depth:
+                self.events.append("write")
+            self.visit(tgt.slice)
+            self.visit(node.value)
+            return
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        # a bare ref passed to a helper (or concatenated) escapes: treat as
+        # read — conservative, and exactly right for the qcarry/sm helpers
+        if node.id == self.name and isinstance(node.ctx, ast.Load):
+            self.events.append("read")
+
+
+def _is_carry(fn_def: ast.FunctionDef, ref_name: str) -> bool:
+    v = _RefAccess(ref_name)
+    for stmt in fn_def.body:
+        v.visit(stmt)
+    if "read" not in v.events:
+        return False
+    return v.events.index("read") <= (
+        v.events.index("write") if "write" in v.events else len(v.events))
+
+
+def classify(spec: KernelSpec) -> dict[str, list]:
+    """{"scratch": [names], "outputs": [(name, carried_axes)]} of carries."""
+    result: dict[str, list] = {"scratch": [], "outputs": []}
+    fn_def = _body_ast(spec.kernel_fn) if spec.kernel_fn else None
+    if fn_def is None:
+        return result
+    expected = (len(spec.in_blocks) + len(spec.out_blocks)
+                + len(spec.scratch))
+    names = kernel_param_names(fn_def, expected)
+    if len(names) != expected:
+        return result
+    n_in, n_out = len(spec.in_blocks), len(spec.out_blocks)
+    out_names = names[n_in:n_in + n_out]
+    scratch_names = names[n_in + n_out:]
+    for decl, name in zip(spec.scratch, scratch_names):
+        if _is_carry(fn_def, name):
+            result["scratch"].append(decl.name)
+    for decl, name in zip(spec.out_blocks, out_names):
+        ignored, _ = probe_index_map(decl.index_map, spec.grid)
+        if ignored and _is_carry(fn_def, name):
+            result["outputs"].append((decl.name, ignored))
+    return result
+
+
+def analyze_spec(spec: KernelSpec) -> list[Finding]:
+    carries = classify(spec)
+    out = []
+    sem = spec.dimension_semantics
+    # a scratch carry persists across the entire grid walk -> every axis
+    # must be sequential; an output revisit only pins its ignored axes
+    carried_axes: set[int] = set()
+    if carries["scratch"]:
+        carried_axes.update(range(len(spec.grid)))
+    for _, axes in carries["outputs"]:
+        carried_axes.update(axes)
+    what = ", ".join(carries["scratch"]
+                     + [n for n, _ in carries["outputs"]])
+    if carried_axes:
+        if sem is None:
+            out.append(Finding(
+                "carry", "carry-default-semantics", spec.name,
+                f"carried state ({what}) but no dimension_semantics "
+                f"declared — the sequential-grid requirement rests on a "
+                f"compiler default"))
+        else:
+            for ax in sorted(carried_axes):
+                if ax < len(sem) and sem[ax] != "arbitrary":
+                    out.append(Finding(
+                        "carry", "carry-under-parallel", spec.name,
+                        f"grid axis {ax} is '{sem[ax]}' but carried state "
+                        f"({what}) needs sequential execution — "
+                        f"declare it 'arbitrary'"))
+    elif sem is None and spec.grid:
+        out.append(Finding(
+            "carry", "missing-semantics", spec.name,
+            "no dimension_semantics declared; mark parallel axes "
+            "'parallel' deliberately, not by omission", severity="warn"))
+    return out
+
+
+def analyze(specs: list[KernelSpec]) -> list[Finding]:
+    # one spec per call site is enough for carry analysis (the body doesn't
+    # change across geometry points) — dedup by site name
+    seen: set[str] = set()
+    out = []
+    for spec in specs:
+        if spec.name in seen:
+            continue
+        seen.add(spec.name)
+        out += analyze_spec(spec)
+    return out

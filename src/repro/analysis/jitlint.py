@@ -1,0 +1,303 @@
+"""jit-discipline linter: retrace and trace-poison hazards, before merge.
+
+PR 7's ``span_traces`` counter detects retraces *after the fact* — at
+runtime, on whatever shapes the run happened to see. This pass moves the
+same discipline to an AST check over ``src/repro`` so the bug classes that
+cause retraces (or silently wrong trace-time work) fail CI before a kernel
+ever launches.
+
+Traced contexts are found syntactically: functions decorated with
+``jax.jit`` (bare, called, or via ``functools.partial(jax.jit, ...)``) and
+Pallas kernel bodies (functions whose positional params end in ``_ref``),
+plus any ``def`` nested inside either. Within a traced context:
+
+  * ``traced-branch``   — a Python ``if``/``while`` whose condition uses a
+    traced parameter *value* (bare name or subscript). Exempt, because they
+    are trace-constant: params named in ``static_argnames``; ``is`` /
+    ``is not`` tests (None-ness is static under tracing); and any attribute
+    access (``x.shape``, ``x.ndim``, ``plan.kern_nd`` — array metadata and
+    config-dataclass fields, not traced values).
+  * ``host-call``       — ``np.*`` / ``numpy.*`` calls, ``.item()`` /
+    ``.tolist()`` / ``.block_until_ready()``, or ``float()/int()/bool()``
+    applied directly to a traced param: all execute at trace time on
+    tracers (TracerArrayConversionError at best, silent trace-time
+    constant-folding at worst).
+  * ``eager-obs-in-trace`` — ``obs.counter/histogram/gauge`` calls: these
+    mutate the process-wide registry *per compilation*, not per dispatch
+    (``obs.span`` is trace-safe by design and allowed).
+
+And independent of context:
+
+  * ``unknown-static-arg``   — ``static_argnames`` naming a parameter the
+    function doesn't have (silent: jax ignores unknown names).
+  * ``unhashable-static-arg`` — a static parameter whose default is a
+    list/dict/set literal (TypeError on first call).
+
+A style pass (``unused-import``, F401-equivalent, honoring ``# noqa``)
+rides along so the tree keeps a lint floor even where the ruff wheel is
+unavailable; ``[tool.ruff]`` in pyproject.toml is the full config when it
+is.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from .report import Finding
+
+SRC_ROOT = pathlib.Path(__file__).resolve().parents[2]   # .../src
+HOST_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+EAGER_OBS = {"counter", "histogram", "gauge"}
+CASTS = {"float", "int", "bool"}
+
+
+def _dotted(node: ast.expr) -> str:
+    """'a.b.c' for Name/Attribute chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _jit_decoration(node: ast.FunctionDef) -> tuple[bool, set[str]]:
+    """(is_jitted, static_argnames) from the decorator list."""
+    static: set[str] = set()
+    jitted = False
+    for dec in node.decorator_list:
+        target, kwargs = dec, []
+        if isinstance(dec, ast.Call):
+            name = _dotted(dec.func)
+            if name.endswith("partial") and dec.args:
+                target, kwargs = dec.args[0], dec.keywords
+            else:
+                target, kwargs = dec.func, dec.keywords
+        name = _dotted(target)
+        if name in ("jax.jit", "jit"):
+            jitted = True
+            for kw in kwargs:
+                if kw.arg == "static_argnames":
+                    for el in ast.walk(kw.value):
+                        if isinstance(el, ast.Constant) \
+                                and isinstance(el.value, str):
+                            static.add(el.value)
+    return jitted, static
+
+
+def _is_kernel_body(node: ast.FunctionDef) -> bool:
+    args = [a.arg for a in node.args.args]
+    if node.args.vararg is not None and node.args.vararg.arg == "refs":
+        return True
+    return len(args) >= 2 and sum(a.endswith("_ref") for a in args) >= 2
+
+
+def _param_names(node: ast.FunctionDef) -> set[str]:
+    names = {a.arg for a in node.args.args + node.args.kwonlyargs}
+    if node.args.vararg:
+        names.add(node.args.vararg.arg)
+    return names
+
+
+def _traced_value_names(cond: ast.expr, traced: set[str]) -> list[str]:
+    """Traced params whose *value* (not a static attr) the expression uses."""
+    hits = []
+
+    class V(ast.NodeVisitor):
+        def visit_Compare(self, node: ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return                       # `x is None`: static trace-time
+            self.generic_visit(node)
+
+        def visit_Attribute(self, node: ast.Attribute):
+            return              # x.shape / plan.kern_nd: trace-constant
+
+        def visit_Name(self, node: ast.Name):
+            if node.id in traced:
+                hits.append(node.id)
+
+    V().visit(cond)
+    return hits
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: pathlib.Path, rel: str, discipline: bool):
+        self.path, self.rel = path, rel
+        self.discipline = discipline
+        self.findings: list[Finding] = []
+        self._ctx: list[tuple[str, set[str]]] = []   # (qualname, traced names)
+
+    def _emit(self, rule: str, obj: str, msg: str, node: ast.AST,
+              severity: str = "error"):
+        self.findings.append(Finding(
+            "jitlint", rule, f"{self.rel}:{obj}", msg, severity=severity,
+            location=f"{self.rel}:{node.lineno}"))
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        jitted, static = _jit_decoration(node)
+        params = _param_names(node)
+        if jitted:
+            unknown = static - params
+            if unknown:
+                self._emit("unknown-static-arg", node.name,
+                           f"static_argnames {sorted(unknown)} not in "
+                           f"signature {sorted(params)}", node)
+            for a, default in _defaults(node):
+                if a in static and isinstance(
+                        default, (ast.List, ast.Dict, ast.Set)):
+                    self._emit("unhashable-static-arg", node.name,
+                               f"static arg {a!r} has an unhashable "
+                               f"{type(default).__name__.lower()} default",
+                               node)
+        enters = jitted or _is_kernel_body(node) or bool(self._ctx)
+        if enters and self.discipline:
+            traced = params - static if (jitted or _is_kernel_body(node)) \
+                else set()
+            self._ctx.append((node.name, traced))
+            self._lint_traced_body(node, traced)
+            self.generic_visit(node)
+            self._ctx.pop()
+        else:
+            self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _lint_traced_body(self, fn: ast.FunctionDef, traced: set[str]):
+        qual = fn.name
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                hits = _traced_value_names(node.test, traced)
+                if hits:
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    self._emit("traced-branch", f"{qual}:{node.lineno}",
+                               f"Python {kind} on traced value(s) "
+                               f"{sorted(set(hits))} inside a jitted body — "
+                               f"use jnp.where / lax.cond", node)
+            elif isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                root = name.split(".")[0] if name else ""
+                if root in ("np", "numpy") and name.count(".") >= 1:
+                    self._emit("host-call", f"{qual}:{node.lineno}",
+                               f"host numpy call {name}() inside a jitted "
+                               f"body executes at trace time", node)
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in HOST_METHODS):
+                    self._emit("host-call", f"{qual}:{node.lineno}",
+                               f".{node.func.attr}() inside a jitted body "
+                               f"forces a host sync at trace time", node)
+                elif (name in CASTS and node.args
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id in traced):
+                    self._emit("host-call", f"{qual}:{node.lineno}",
+                               f"{name}() on traced param "
+                               f"{node.args[0].id!r} raises under tracing",
+                               node)
+                elif name.startswith("obs.") \
+                        and name.split(".")[1] in EAGER_OBS:
+                    self._emit("eager-obs-in-trace", f"{qual}:{node.lineno}",
+                               f"{name}() inside a jitted body records "
+                               f"per-compilation, not per-dispatch — hoist "
+                               f"to the eager wrapper (obs.span is the "
+                               f"trace-safe primitive)", node)
+
+
+def _defaults(node: ast.FunctionDef):
+    args = node.args
+    pos = args.args
+    out = list(zip([a.arg for a in pos[len(pos) - len(args.defaults):]],
+                   args.defaults))
+    out += [(a.arg, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+            if d is not None]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Style pass: unused imports (F401-equivalent), honoring `# noqa`
+# --------------------------------------------------------------------------
+
+def _unused_imports(tree: ast.Module, source: str, rel: str) -> list[Finding]:
+    lines = source.splitlines()
+    imported: list[tuple[str, str, int]] = []    # (bound name, shown, lineno)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                bound = al.asname or al.name.split(".")[0]
+                imported.append((bound, al.name, node.lineno))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for al in node.names:
+                if al.name == "*":
+                    continue
+                bound = al.asname or al.name
+                imported.append((bound, al.name, node.lineno))
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+    # names re-exported via __all__ count as used
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)):
+            for el in ast.walk(node.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    used.add(el.value)
+    out = []
+    for bound, shown, lineno in imported:
+        if bound in used or bound == "_":
+            continue
+        line = lines[lineno - 1] if lineno - 1 < len(lines) else ""
+        if "noqa" in line:
+            continue
+        out.append(Finding(
+            "style", "unused-import", f"{rel}:{lineno}:{bound}",
+            f"{shown!r} imported but unused", location=f"{rel}:{lineno}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def lint_source(source: str, rel: str = "<string>", *,
+                style: bool = False, discipline: bool = True
+                ) -> list[Finding]:
+    """Lint one module's source text (the unit the tests fixture against)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("jitlint", "syntax-error", rel, str(e),
+                        location=f"{rel}:{e.lineno}")]
+    out: list[Finding] = []
+    if discipline:
+        linter = _FileLinter(pathlib.Path(rel), rel, discipline=True)
+        linter.visit(tree)
+        out += linter.findings
+    else:
+        linter = _FileLinter(pathlib.Path(rel), rel, discipline=False)
+        linter.visit(tree)
+        out += [f for f in linter.findings
+                if f.rule in ("unknown-static-arg", "unhashable-static-arg")]
+    if style:
+        out += _unused_imports(tree, source, rel)
+    return out
+
+
+def analyze(root: pathlib.Path | None = None, *, style: bool = True,
+            discipline: bool = True) -> list[Finding]:
+    root = root or (SRC_ROOT / "repro")
+    out: list[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = str(path.relative_to(root.parent))
+        out += lint_source(path.read_text(), rel, style=style,
+                           discipline=discipline)
+    return out

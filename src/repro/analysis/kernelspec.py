@@ -1,0 +1,169 @@
+"""KernelSpec: the declarative contract between Pallas call sites and the
+static analyzer.
+
+Every ``pl.pallas_call`` site in :mod:`repro.kernels` declares a *spec
+builder* — a plain-Python function that, given a concrete geometry point
+(shape, dtype itemsize, capacity fraction, attention dims, ...), returns a
+:class:`KernelSpec` describing exactly what that call would launch: grid,
+per-grid-step block shapes and dtypes, scratch shapes and memory spaces,
+``dimension_semantics``, and the kernel body function itself. Builders are
+required to route through the same geometry helpers the real wrapper uses
+(``plan_stream``, ``band_for``, the module TILE constants), so a spec cannot
+silently drift from the launch it describes.
+
+This module is import-light on purpose: kernels import it (to register their
+builders) and the analysis passes import the kernels (to collect them), so
+nothing here may import the passes or jax. Dtypes are therefore carried as
+``(name, itemsize)`` pairs, not jnp dtypes.
+
+The three analysis passes consume specs as follows:
+
+  * ``analysis.resources`` pads each block/scratch buffer to the TPU tile
+    grid for its dtype and sums the per-grid-step VMEM/SMEM footprint;
+  * ``analysis.carry``  classifies scratch refs (and revisited output
+    blocks) as cross-step carries via AST inspection of ``kernel_fn`` and
+    checks them against ``dimension_semantics``;
+  * both report through ``analysis.report`` keyed by ``KernelSpec.name``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+VMEM = "vmem"
+SMEM = "smem"
+
+# dtype name -> itemsize, for declaring buffers without importing jnp
+ITEMSIZE = {
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "uint16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "bool": 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDecl:
+    """One input or output BlockSpec of a pallas_call.
+
+    ``index_map`` is the real (or faithfully re-stated) BlockSpec index map;
+    the passes probe it with integer grid coordinates to learn which grid
+    axes it ignores (a revisited block) and whether it varies at all (a
+    varying block is double-buffered by the Pallas pipeline; a resident one
+    is not).
+    """
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    memory: str = VMEM
+    index_map: Callable | None = None
+
+    @property
+    def itemsize(self) -> int:
+        return ITEMSIZE[self.dtype]
+
+    @property
+    def elems(self) -> int:
+        return math.prod(self.shape) if self.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchDecl:
+    """One scratch_shapes entry (VMEM or SMEM) of a pallas_call."""
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    memory: str = VMEM
+
+    @property
+    def itemsize(self) -> int:
+        return ITEMSIZE[self.dtype]
+
+    @property
+    def elems(self) -> int:
+        return math.prod(self.shape) if self.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Static declaration of one pallas_call launch at one geometry point.
+
+    ``critical_lanes`` names in-kernel lane-width-critical dimensions that
+    are *not* the trailing axis of any block (e.g. flash-decode's KV tile,
+    which lands on the lane axis of the score matrix after the einsum); the
+    resource pass flags entries below the 128-lane VPU width.
+
+    ``point`` is a short deterministic description of the geometry point the
+    spec was built at; it feeds finding messages, never finding keys, so the
+    committed baseline stays stable as the evaluated space grows.
+    """
+    name: str                                  # unique call-site name
+    module: str                                # defining module (repro.kernels.*)
+    grid: tuple[int, ...]
+    in_blocks: tuple[BlockDecl, ...]
+    out_blocks: tuple[BlockDecl, ...]
+    scratch: tuple[ScratchDecl, ...] = ()
+    dimension_semantics: tuple[str, ...] | None = None
+    kernel_fn: Callable | None = None          # body, for carry AST analysis
+    critical_lanes: tuple[tuple[str, int], ...] = ()
+    point: str = ""
+
+    def blocks(self) -> tuple[BlockDecl, ...]:
+        return self.in_blocks + self.out_blocks
+
+
+# --------------------------------------------------------------------------
+# Builder registry
+# --------------------------------------------------------------------------
+
+_BUILDERS: dict[str, Callable] = {}
+
+
+def register_spec(name: str):
+    """Decorator: register ``fn(**point) -> KernelSpec`` under ``name``.
+
+    One registration per pallas_call site; re-registering a name overwrites
+    (module reload safety), never accumulates.
+    """
+    def deco(fn):
+        _BUILDERS[name] = fn
+        return fn
+    return deco
+
+
+def spec_builders() -> dict[str, Callable]:
+    """name -> builder for every registered pallas_call site.
+
+    Importing :mod:`repro.kernels` is what populates the registry; callers
+    (the analysis passes) do that import themselves so this module stays
+    jax-free.
+    """
+    return dict(_BUILDERS)
+
+
+def probe_index_map(index_map: Callable | None,
+                    grid: Sequence[int]) -> tuple[tuple[int, ...], bool]:
+    """(ignored_axes, varies): which grid axes the map ignores, and whether
+    the block address varies over the grid at all.
+
+    Probes with small in-range integer coordinates; index maps built from
+    jnp ops return arrays, which compare fine under ``int()``.
+    """
+    if index_map is None or not grid:
+        return (), True
+
+    def at(coords):
+        out = index_map(*coords)
+        if not isinstance(out, tuple):
+            out = (out,)
+        return tuple(int(c) for c in out)
+
+    base = [0] * len(grid)
+    ignored = []
+    for ax, extent in enumerate(grid):
+        seen = {at(tuple(base[:ax] + [i] + base[ax + 1:]))
+                for i in range(min(int(extent), 3))}
+        if len(seen) == 1:
+            ignored.append(ax)
+    varies = len(ignored) < len(grid)
+    return tuple(ignored), varies

@@ -1,0 +1,191 @@
+"""Kernel resource analyzer: dtype-aware VMEM/SMEM footprints per grid step.
+
+Model (matches the Mosaic vector-memory layout rules in the Pallas TPU
+guide): a VMEM buffer is padded to the tile grid for its dtype — the
+trailing axis to the 128-lane VPU width, the second-to-last axis to the
+dtype's sublane count (32 bytes / itemsize: f32 -> 8, bf16/u16 -> 16,
+int8/u8 -> 32); rank-1 buffers live on the lane axis, rank-0 on one tile.
+A *varying* block (its index map moves across the grid) is double-buffered
+by the Pallas pipeline; a *resident* block (constant index map, e.g. the
+megakernels' payload output) and scratch buffers are single copies. SMEM
+buffers are scalar memory: raw bytes, no tile padding.
+
+Checks per spec, evaluated over every point :mod:`.space` ships:
+
+  * ``vmem-overflow``  — per-grid-step VMEM footprint exceeds the per-core
+    budget (16 MiB, with a pipelining reserve);
+  * ``smem-overflow``  — scalar memory above the (tiny) SMEM budget;
+  * ``lane-underfill`` — a large buffer whose trailing axis fills < 128
+    lanes (16x-padded payload rows), or a declared ``critical_lanes`` entry
+    below 128 (the paged flash-decode ps<128 case — a tracked finding, not
+    folklore);
+  * ``pad-waste``      — tile padding more than doubles a large buffer.
+
+Plus the helper cross-check the satellite task asks for:
+``check_band_helpers`` pins ``lorenzo_quant.band_for`` (and the fused
+band sizing) against this module's own footprint model — the band a helper
+picks must actually fit the budget it claims to enforce, at every itemsize.
+"""
+from __future__ import annotations
+
+import math
+
+from .kernelspec import (SMEM, VMEM, BlockDecl, KernelSpec,
+                         probe_index_map)
+from .report import Finding
+
+LANE = 128
+SUBLANE_BYTES = 32                   # sublane count = SUBLANE_BYTES / itemsize
+VMEM_BUDGET = 16 << 20               # bytes per core (v4/v5e class)
+VMEM_RESERVE = 0.25                  # compiler/pipeline headroom fraction
+SMEM_BUDGET = 16 << 10               # scalar memory is tiny
+BIG_BUFFER = 64 << 10                # lane/pad checks only bite above this
+PAD_WASTE_FACTOR = 2.0
+
+
+def sublanes(itemsize: int) -> int:
+    return max(1, SUBLANE_BYTES // itemsize)
+
+
+def padded_bytes(shape: tuple[int, ...], itemsize: int,
+                 memory: str = VMEM) -> int:
+    """Bytes one buffer occupies after tile padding (VMEM) or raw (SMEM)."""
+    if memory == SMEM or not shape:
+        return max(1, math.prod(shape) if shape else 1) * itemsize
+    dims = list(shape)
+    if len(dims) == 1:
+        dims = [1] + dims
+    dims[-1] = -(-dims[-1] // LANE) * LANE
+    sl = sublanes(itemsize)
+    dims[-2] = -(-dims[-2] // sl) * sl
+    return math.prod(dims) * itemsize
+
+
+def _buffer_copies(spec: KernelSpec, b: BlockDecl) -> int:
+    _, varies = probe_index_map(b.index_map, spec.grid)
+    return 2 if varies else 1
+
+
+def footprint(spec: KernelSpec) -> dict:
+    """Per-grid-step memory footprint of one spec, by space and by buffer."""
+    vmem = smem = 0
+    rows = []
+    for b in spec.blocks():
+        copies = _buffer_copies(spec, b)
+        by = padded_bytes(b.shape, b.itemsize, b.memory) * copies
+        rows.append((b.name, b.memory, b.shape, b.dtype, copies, by))
+        if b.memory == SMEM:
+            smem += by
+        else:
+            vmem += by
+    for s in spec.scratch:
+        by = padded_bytes(s.shape, s.itemsize, s.memory)
+        rows.append((s.name, s.memory, s.shape, s.dtype, 1, by))
+        if s.memory == SMEM:
+            smem += by
+        else:
+            vmem += by
+    return {"vmem": vmem, "smem": smem, "rows": rows}
+
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 1 << 20:
+        return f"{n / (1 << 20):.1f}MiB"
+    if n >= 1 << 10:
+        return f"{n / (1 << 10):.1f}KiB"
+    return f"{n}B"
+
+
+def analyze_spec(spec: KernelSpec) -> list[Finding]:
+    fp = footprint(spec)
+    out = []
+    budget = int(VMEM_BUDGET * (1 - VMEM_RESERVE))
+    if fp["vmem"] > budget:
+        worst = max((r for r in fp["rows"] if r[1] == VMEM), key=lambda r: r[5])
+        out.append(Finding(
+            "resources", "vmem-overflow", spec.name,
+            f"per-step VMEM {_fmt_bytes(fp['vmem'])} > budget "
+            f"{_fmt_bytes(budget)} at {spec.point}; dominant buffer "
+            f"{worst[0]} {worst[2]} {worst[3]} x{worst[4]} = "
+            f"{_fmt_bytes(worst[5])}"))
+    if fp["smem"] > SMEM_BUDGET:
+        out.append(Finding(
+            "resources", "smem-overflow", spec.name,
+            f"per-step SMEM {_fmt_bytes(fp['smem'])} > "
+            f"{_fmt_bytes(SMEM_BUDGET)} at {spec.point}"))
+    for b in spec.blocks():
+        raw = b.elems * b.itemsize
+        if raw < BIG_BUFFER or b.memory != VMEM or not b.shape:
+            continue
+        pad = padded_bytes(b.shape, b.itemsize, b.memory)
+        if b.shape[-1] < LANE:
+            out.append(Finding(
+                "resources", "lane-underfill", f"{spec.name}.{b.name}",
+                f"trailing axis {b.shape[-1]} < {LANE} lanes on "
+                f"{_fmt_bytes(raw)} buffer {b.shape} {b.dtype} "
+                f"(pads to {_fmt_bytes(pad)}) at {spec.point}"))
+        elif pad > raw * PAD_WASTE_FACTOR:
+            out.append(Finding(
+                "resources", "pad-waste", f"{spec.name}.{b.name}",
+                f"tile padding inflates {b.shape} {b.dtype} "
+                f"{_fmt_bytes(raw)} -> {_fmt_bytes(pad)} at {spec.point}"))
+    for dim_name, size in spec.critical_lanes:
+        if size < LANE:
+            out.append(Finding(
+                "resources", "lane-underfill", f"{spec.name}.{dim_name}",
+                f"lane-critical dim {dim_name}={size} < {LANE} "
+                f"at {spec.point}"))
+    return out
+
+
+def check_band_helpers() -> list[Finding]:
+    """Cross-check the in-code band-sizing helpers against this model.
+
+    ``lorenzo_quant.band_for(trailing, itemsize)`` promises the band's
+    *input* stays within ``VMEM_BAND_BUDGET``; verify that promise with the
+    model's own padded-bytes math at every itemsize the pipeline can feed
+    it, and that the helper is maximal (one more row would bust budget or
+    MAX_BAND) so bf16 inputs actually get the doubled bands the dtype
+    allows.
+    """
+    from repro.kernels import fused_compress as fc
+    from repro.kernels import lorenzo_quant as lq
+    out = []
+    for trailing in (64, 1024, 4096, 1 << 16, 1 << 20):
+        for dtype, itemsize in (("float32", 4), ("bfloat16", 2)):
+            band = lq.band_for(trailing, itemsize=itemsize)
+            used = band * trailing * itemsize
+            if band > 1 and used > lq.VMEM_BAND_BUDGET:
+                out.append(Finding(
+                    "resources", "band-helper-overbudget",
+                    "lorenzo_quant.band_for",
+                    f"band_for({trailing}, itemsize={itemsize}) = {band} "
+                    f"uses {_fmt_bytes(used)} > VMEM_BAND_BUDGET "
+                    f"{_fmt_bytes(lq.VMEM_BAND_BUDGET)}"))
+            grown = (band + 1) * trailing * itemsize
+            if band < lq.MAX_BAND and grown <= lq.VMEM_BAND_BUDGET:
+                out.append(Finding(
+                    "resources", "band-helper-underfill",
+                    "lorenzo_quant.band_for",
+                    f"band_for({trailing}, itemsize={itemsize}) = {band} "
+                    f"leaves budget headroom for band {band + 1} "
+                    f"({_fmt_bytes(grown)} <= "
+                    f"{_fmt_bytes(lq.VMEM_BAND_BUDGET)}) — band sizing is "
+                    f"not dtype-aware"))
+            fband = fc._fused_band(trailing, itemsize=itemsize)
+            if fband * trailing * itemsize > lq.VMEM_BAND_BUDGET \
+                    and fband > -(-2 * fc.TILE // trailing):
+                out.append(Finding(
+                    "resources", "band-helper-overbudget",
+                    "fused_compress._fused_band",
+                    f"_fused_band({trailing}, itemsize={itemsize}) = {fband} "
+                    f"busts the band budget"))
+    return out
+
+
+def analyze(specs: list[KernelSpec]) -> list[Finding]:
+    out = []
+    for spec in specs:
+        out += analyze_spec(spec)
+    out += check_band_helpers()
+    return out

@@ -1,0 +1,96 @@
+"""The shipped config space the resource analyzer evaluates specs over.
+
+Static analysis is only as honest as the geometry points it checks. This
+module enumerates the shapes the repo actually ships — not hypotheticals:
+
+  * **FZ payload shapes**: the property-suite/bench 1D leaves, the
+    gradient-bucket leaves ``dist/bucketed_reduce`` produces (bucket_bytes
+    default / 4B), 2D/3D scientific fields at the paper's scales, and the
+    flattened KV page slabs every shipped ``PoolConfig`` geometry parks
+    (examples, benchmarks, and the serve launcher defaults) — each crossed
+    with the ``capacity_frac`` values in the tree (1.0 default, 0.75 bench,
+    0.5 tests) and both f32 and bf16 itemsizes (KV pages are bf16).
+  * **flash-decode geometries**: every assigned arch config (full + smoke)
+    from :mod:`repro.configs` at the contiguous ``KV_TILE`` and at the
+    shipped paged page sizes (8 from benchmarks/examples, 16 the PoolConfig
+    default, 128 the lane-aligned target) — the sub-lane page sizes are
+    exactly the tracked ``lane-underfill`` findings.
+
+``build_specs()`` imports :mod:`repro.kernels` (which registers every
+call-site builder) and materializes one :class:`KernelSpec` per
+(site, point).
+"""
+from __future__ import annotations
+
+from .kernelspec import KernelSpec, spec_builders
+
+# (shape, dtype) FZ inputs: property/bench leaves, gradient buckets
+# (4 MiB default bucket -> 1M f32 elems), fields, flattened KV page slabs
+FZ_SHAPES: tuple[tuple[tuple[int, ...], str], ...] = (
+    ((4096,), "float32"),                 # one-tile leaf (property suite)
+    ((65536,), "float32"),                # small gradient leaf
+    ((1 << 20,), "float32"),              # 4 MiB reduce bucket
+    ((1024, 1024), "float32"),            # 2D field (paper-scale plane)
+    ((96, 96, 96), "float32"),            # 3D field (NYX-class subcube)
+    ((2048,), "bfloat16"),                # KV page slab: ps=8 x KVH=2 x hd=128
+    ((1 << 20,), "bfloat16"),             # bf16 activation leaf
+)
+
+CAPACITY_FRACS = (1.0, 0.75, 0.5)         # default / bench / test values
+
+# paged-decode page sizes shipped in the tree (PoolConfig default 16,
+# benches/examples 8, lane-aligned target 128)
+PAGE_SIZES = (8, 16, 128)
+
+# decode batch sizes and contiguous KV lengths from configs/base.SHAPES
+DECODE_BATCH = 8
+CONTIG_KV = 4096
+
+
+def _arch_points():
+    """(label, B, S, KVH, G, D) attention geometries from the arch registry."""
+    from repro import configs
+    pts = []
+    for arch_id in configs.ARCH_IDS:
+        for smoke in (False, True):
+            cfg = configs.get(arch_id, smoke=smoke)
+            if cfg.attention_free or cfg.n_kv_heads <= 0:
+                continue
+            kvh = cfg.n_kv_heads
+            g = max(1, cfg.n_heads // kvh)
+            pts.append((f"{cfg.arch_id}", DECODE_BATCH, CONTIG_KV,
+                        kvh, g, cfg.hd))
+    return pts
+
+
+def build_specs() -> list[KernelSpec]:
+    """One KernelSpec per (registered call site, shipped geometry point)."""
+    import repro.kernels  # noqa: F401  -- registers every spec builder
+    builders = spec_builders()
+    specs: list[KernelSpec] = []
+
+    for shape, dtype in FZ_SHAPES:
+        specs.append(builders["lorenzo_quant"](shape=shape, dtype=dtype))
+        for frac in CAPACITY_FRACS:
+            specs.append(builders["fused_compress"](
+                shape=shape, dtype=dtype, capacity_frac=frac))
+            specs.append(builders["fused_decode"](
+                shape=shape, capacity_frac=frac))
+        n = 1
+        for s in shape:
+            n *= s
+        n_tiles = -(-n // 4096)
+        specs.append(builders["bitshuffle_flag.shuffle"](n_tiles=n_tiles))
+        specs.append(builders["bitshuffle_flag.unshuffle"](n_tiles=n_tiles))
+        specs.append(builders["fused_shuffle_encode"](
+            n_tiles=n_tiles, capacity_frac=1.0))
+
+    for label, b, s, kvh, g, d in _arch_points():
+        specs.append(builders["flash_decode"](
+            B=b, S=s, KVH=kvh, G=g, D=d, kv_tile=None,
+            point=f"{label} contiguous"))
+        for ps in PAGE_SIZES:
+            specs.append(builders["flash_decode"](
+                B=b, S=s, KVH=kvh, G=g, D=d, kv_tile=ps,
+                point=f"{label} paged ps={ps}"))
+    return specs

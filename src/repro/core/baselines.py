@@ -23,7 +23,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import quant
 
 # ---------------------------------------------------------------------------
 # cuSZ-like: dual-quantization + canonical Huffman

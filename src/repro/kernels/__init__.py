@@ -11,6 +11,19 @@ kernel modules (pl.pallas_call + BlockSpec VMEM tiling):
     flash_decode     -- block-parallel KV-tile decode attention (contiguous
                         + paged layouts; serving hot path)
 ops.py -- jit wrappers (interpret-mode fallback off-TPU); ref.py -- oracles.
+
+Static-analysis contract: every ``pl.pallas_call`` site in these modules
+registers a :class:`~repro.analysis.kernelspec.KernelSpec` builder
+(``@register_spec(name)``) next to the launch it mirrors — same grid, block
+shapes/dtypes/index maps, scratch declarations, and
+``dimension_semantics``, built with the same geometry helpers the wrapper
+uses (``plan_stream``, ``band_for``, the module TILE constants) so the spec
+cannot drift silently. ``repro.analysis`` evaluates the registered specs
+over the shipped config space (``python -m repro.analysis --check``; the
+``scripts/ci.sh analyze`` tier): VMEM/SMEM budgets, lane fill, and
+carry-vs-semantics soundness. A new kernel, or any change to a launch's
+geometry, must update its builder in the same commit — the analyze tier's
+committed baseline (``analysis/baseline.json``) will flag the drift.
 """
 from . import (bitshuffle_flag, flash_decode, fused_compress,  # noqa: F401
                fused_decode, lorenzo_quant, ops, ref)

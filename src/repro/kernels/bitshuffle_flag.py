@@ -23,6 +23,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.kernelspec import BlockDecl, KernelSpec, register_spec
 
 TILE = 4096
 GROUP = 16
@@ -94,6 +97,9 @@ def bitshuffle_flag(codes_tiles: jax.Array, *, interpret: bool = False):
                    pl.BlockSpec((TILES_PER_BLOCK, BLOCKS_PER_TILE), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((padded, TILE), jnp.uint16),
                    jax.ShapeDtypeStruct((padded, BLOCKS_PER_TILE), jnp.uint8)],
+        # per-step tiles are independent: parallel by declaration, not default
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)
     return shuffled[:n_tiles], flags[:n_tiles]
@@ -112,6 +118,48 @@ def bitunshuffle_tiles(shuffled_tiles: jax.Array, *, interpret: bool = False) ->
         in_specs=[pl.BlockSpec((TILES_PER_BLOCK, TILE), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((TILES_PER_BLOCK, TILE), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((padded, TILE), jnp.uint16),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)
     return codes[:n_tiles]
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis declarations (repro.analysis): mirror the launches above
+# ---------------------------------------------------------------------------
+
+def _grid_of(n_tiles: int) -> int:
+    return _pad_tiles(max(n_tiles, 1)) // TILES_PER_BLOCK
+
+
+@register_spec("bitshuffle_flag.shuffle")
+def _shuffle_spec(n_tiles: int) -> KernelSpec:
+    tb = TILES_PER_BLOCK
+    return KernelSpec(
+        name="bitshuffle_flag.shuffle", module=__name__,
+        grid=(_grid_of(n_tiles),),
+        in_blocks=(BlockDecl("codes", (tb, TILE), "uint16",
+                             index_map=lambda i: (i, 0)),),
+        out_blocks=(BlockDecl("shuffled", (tb, TILE), "uint16",
+                              index_map=lambda i: (i, 0)),
+                    BlockDecl("flags", (tb, BLOCKS_PER_TILE), "uint8",
+                              index_map=lambda i: (i, 0))),
+        dimension_semantics=("parallel",),
+        kernel_fn=_bitshuffle_flag_kernel,
+        point=f"n_tiles={n_tiles}")
+
+
+@register_spec("bitshuffle_flag.unshuffle")
+def _unshuffle_spec(n_tiles: int) -> KernelSpec:
+    tb = TILES_PER_BLOCK
+    return KernelSpec(
+        name="bitshuffle_flag.unshuffle", module=__name__,
+        grid=(_grid_of(n_tiles),),
+        in_blocks=(BlockDecl("shuffled", (tb, TILE), "uint16",
+                             index_map=lambda i: (i, 0)),),
+        out_blocks=(BlockDecl("codes", (tb, TILE), "uint16",
+                              index_map=lambda i: (i, 0)),),
+        dimension_semantics=("parallel",),
+        kernel_fn=_unshuffle_kernel,
+        point=f"n_tiles={n_tiles}")

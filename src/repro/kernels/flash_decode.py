@@ -45,6 +45,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.kernelspec import BlockDecl, KernelSpec, register_spec
 
 NEG_INF = -1e30        # same finite stand-in as dist/flash_decode.py
 KV_TILE = 128          # default KV positions per grid step (TPU lane width)
@@ -118,9 +121,53 @@ def _decode_partials_tiles(q4: jax.Array, k_tiles: jax.Array, v_tiles: jax.Array
             jax.ShapeDtypeStruct((B, KVH, G, D), jnp.float32),
             jax.ShapeDtypeStruct((B, KVH, G), jnp.float32),
         ],
+        # batch rows are independent ("parallel"); the KV-tile axis carries
+        # the online-softmax state in the revisited output blocks, so it
+        # must stay sequential ("arbitrary") — checked by repro.analysis
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(length_eff.reshape(B, 1), q4, k_tiles, v_tiles)
     return m, num, den
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis declaration (repro.analysis): mirrors the launch above
+# ---------------------------------------------------------------------------
+
+@register_spec("flash_decode")
+def kernel_spec(B: int, S: int, KVH: int, G: int, D: int,
+                kv_tile: int | None = None, point: str = "") -> KernelSpec:
+    """KernelSpec at one attention geometry. ``kv_tile`` is the page size on
+    the paged path (a page is a tile); contiguous uses KV_TILE clamped to S.
+    The tile lands on the lane axis of the in-kernel score matrix, so it is
+    declared lane-critical: ps < 128 under-fills the VPU."""
+    tile = min(kv_tile or KV_TILE, S)
+    T = -(-S // tile)
+    return KernelSpec(
+        name="flash_decode", module=__name__, grid=(B, T),
+        in_blocks=(
+            BlockDecl("len", (1, 1), "int32",
+                      index_map=lambda b, t: (b, 0)),
+            BlockDecl("q", (1, KVH, G, D), "float32",
+                      index_map=lambda b, t: (b, 0, 0, 0)),
+            BlockDecl("k", (1, 1, tile, KVH, D), "float32",
+                      index_map=lambda b, t: (b, t, 0, 0, 0)),
+            BlockDecl("v", (1, 1, tile, KVH, D), "float32",
+                      index_map=lambda b, t: (b, t, 0, 0, 0)),
+        ),
+        out_blocks=(
+            BlockDecl("m", (1, KVH, G), "float32",
+                      index_map=lambda b, t: (b, 0, 0)),
+            BlockDecl("num", (1, KVH, G, D), "float32",
+                      index_map=lambda b, t: (b, 0, 0, 0)),
+            BlockDecl("den", (1, KVH, G), "float32",
+                      index_map=lambda b, t: (b, 0, 0)),
+        ),
+        dimension_semantics=("parallel", "arbitrary"),
+        kernel_fn=_flash_decode_kernel,
+        critical_lanes=(("kv_tile", tile),),
+        point=point or f"B={B} S={S} KVH={KVH} G={G} D={D} tile={tile}")
 
 
 def _prep_q(q: jax.Array, KVH: int):

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.kernelspec import (BlockDecl, KernelSpec, ScratchDecl,
+                                       register_spec)
 from . import bitshuffle_flag as _bsf
 from . import lorenzo_quant as _lq
 
@@ -91,11 +93,19 @@ class StreamPlan:
         return self.total_tiles * FLAG_WORDS_PER_TILE
 
 
-def _fused_band(trailing_elems: int) -> int:
+def _fused_band(trailing_elems: int, *, itemsize: int = 4) -> int:
     """Band sizing for the fused kernels: at least ~2 tiles of codes per step
     (so tiny trailing axes don't degenerate into thousands of carry-only
-    steps) but still within the per-band VMEM budget for wide planes."""
-    budget_rows = max(1, _lq.VMEM_BAND_BUDGET // (4 * trailing_elems))
+    steps) but still within the per-band VMEM budget for wide planes.
+
+    ``itemsize`` is the band input's element size, mirroring
+    ``lorenzo_quant.band_for``'s dtype awareness. The fused wrappers cast
+    to f32 before the launch today (the StreamPlan must agree between the
+    compress and decompress megakernels, and decode's band output is always
+    f32), so they plan at the default itemsize=4; the parameter keeps the
+    budget math honest for the analyzer and for a future native-bf16 plan.
+    """
+    budget_rows = max(1, _lq.VMEM_BAND_BUDGET // (itemsize * trailing_elems))
     want = max(_lq.MAX_BAND, -(-2 * TILE // trailing_elems))
     return max(1, min(budget_rows, want))
 
@@ -343,3 +353,73 @@ def fused_shuffle_encode(codes_flat: jax.Array, *, capacity: int,
         interpret=interpret,
     )(x)
     return bitflags[0, :flag_words], payload[:capacity], nnz[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis declarations (repro.analysis): mirror the launches above
+# ---------------------------------------------------------------------------
+
+def _capacity_for(n: int, capacity_frac: float) -> int:
+    """FZConfig.payload_capacity restated on this module's constants."""
+    n_blocks = (-(-n // TILE) * TILE) // BLOCK_WORDS
+    return max(1, int(n_blocks * capacity_frac))
+
+
+@register_spec("fused_compress")
+def kernel_spec(shape: tuple[int, ...], capacity_frac: float = 1.0,
+                dtype: str = "float32") -> KernelSpec:
+    """KernelSpec for ``fused_compress``. ``dtype`` is the *source* dtype;
+    the wrapper casts to f32 before launch (the StreamPlan must agree with
+    the decode megakernel), so the modeled input block is always f32."""
+    p = plan_stream(tuple(shape))
+    capacity = _capacity_for(p.n, capacity_frac)
+    steps = max(p.bands, -(-p.padded_n // p.m))
+    wmax = p.wmax_compress
+    fw_pad = p.flag_words + wmax * FLAG_WORDS_PER_TILE
+    zeros_trail = (0,) * len(p.trailing)
+    clamp = p.bands - 1
+    return KernelSpec(
+        name="fused_compress", module=__name__, grid=(steps,),
+        in_blocks=(
+            BlockDecl("x", (p.band, *p.trailing), "float32",
+                      index_map=lambda i: (min(i, clamp), *zeros_trail)),
+            BlockDecl("halo", (1, *p.trailing), "float32",
+                      index_map=lambda i: (max(min(i, clamp) * p.band - 1, 0),
+                                           *zeros_trail)),
+            BlockDecl("eb", (1, 1), "float32", index_map=lambda i: (0, 0)),
+        ),
+        out_blocks=(
+            BlockDecl("bitflags", (1, fw_pad), "uint32",
+                      index_map=lambda i: (0, 0)),
+            BlockDecl("payload", (capacity + 1, BLOCK_WORDS), "uint16",
+                      index_map=lambda i: (0, 0)),
+            BlockDecl("nnz", (1, 1), "int32", index_map=lambda i: (0, 0)),
+        ),
+        scratch=(ScratchDecl("carry", (1, TILE), "uint16", "vmem"),
+                 ScratchDecl("sm", (4,), "int32", "smem")),
+        dimension_semantics=("arbitrary",),
+        kernel_fn=_make_compress_kernel(p, capacity, "sign_mag"),
+        point=(f"shape={tuple(shape)} src={dtype} "
+               f"capacity_frac={capacity_frac} capacity={capacity}"))
+
+
+@register_spec("fused_shuffle_encode")
+def _encode_spec(n_tiles: int, capacity_frac: float = 1.0) -> KernelSpec:
+    tps = _bsf.TILES_PER_BLOCK
+    padded = -(-max(n_tiles, 1) // tps) * tps
+    capacity = _capacity_for(n_tiles * TILE, capacity_frac)
+    return KernelSpec(
+        name="fused_shuffle_encode", module=__name__, grid=(padded // tps,),
+        in_blocks=(BlockDecl("codes", (tps, TILE), "uint16",
+                             index_map=lambda i: (i, 0)),),
+        out_blocks=(
+            BlockDecl("bitflags", (1, tps * FLAG_WORDS_PER_TILE), "uint32",
+                      index_map=lambda i: (0, i)),
+            BlockDecl("payload", (capacity + 1, BLOCK_WORDS), "uint16",
+                      index_map=lambda i: (0, 0)),
+            BlockDecl("nnz", (1, 1), "int32", index_map=lambda i: (0, 0)),
+        ),
+        scratch=(ScratchDecl("sm", (1,), "int32", "smem"),),
+        dimension_semantics=("arbitrary",),
+        kernel_fn=_make_encode_kernel(capacity, tps),
+        point=f"n_tiles={n_tiles} capacity_frac={capacity_frac}")

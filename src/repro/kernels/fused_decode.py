@@ -35,11 +35,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.kernelspec import (BlockDecl, KernelSpec, ScratchDecl,
+                                       register_spec)
 from repro.core import quant as _quant
 from . import bitshuffle_flag as _bsf
 from .fused_compress import (BLOCK_WORDS, BLOCKS_PER_TILE, FLAG_WORDS_PER_TILE,
                              GROUP, GROUPS_PER_TILE, ROW_1D, TILE, StreamPlan,
-                             plan_stream)
+                             _capacity_for, plan_stream)
 
 
 def _unshuffle_tiles(words: jax.Array, wmax: int) -> jax.Array:
@@ -196,3 +198,38 @@ def fused_decompress(bitflags: jax.Array, payload: jax.Array, eb: jax.Array,
     if p.kern_nd == 1:
         return out.reshape(-1)[: p.n]
     return out[: p.lead]
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis declaration (repro.analysis): mirrors the launch above
+# ---------------------------------------------------------------------------
+
+@register_spec("fused_decode")
+def kernel_spec(shape: tuple[int, ...],
+                capacity_frac: float = 1.0) -> KernelSpec:
+    p = plan_stream(tuple(shape))
+    capacity = _capacity_for(p.n, capacity_frac)
+    wmax = p.wmax_decode
+    need = (-(-p.bands * p.m // TILE) + wmax) * FLAG_WORDS_PER_TILE
+    zeros_trail = (0,) * len(p.trailing)
+    qcarry_shape = (1, *p.trailing) if p.kern_nd > 1 else (1, 1)
+    return KernelSpec(
+        name="fused_decode", module=__name__, grid=(p.bands,),
+        in_blocks=(
+            BlockDecl("bitflags", (1, max(need, 1)), "uint32",
+                      index_map=lambda i: (0, 0)),
+            BlockDecl("payload", (capacity, BLOCK_WORDS), "uint16",
+                      index_map=lambda i: (0, 0)),
+            BlockDecl("eb", (1, 1), "float32", index_map=lambda i: (0, 0)),
+        ),
+        out_blocks=(
+            BlockDecl("out", (p.band, *p.trailing), "float32",
+                      index_map=lambda i: (i, *zeros_trail)),
+        ),
+        scratch=(ScratchDecl("carry", (1, TILE), "uint16", "vmem"),
+                 ScratchDecl("qcarry", qcarry_shape, "int32", "vmem"),
+                 ScratchDecl("sm", (4,), "int32", "smem")),
+        dimension_semantics=("arbitrary",),
+        kernel_fn=_make_decode_kernel(p, capacity, "sign_mag", 0),
+        point=(f"shape={tuple(shape)} capacity_frac={capacity_frac} "
+               f"capacity={capacity}"))

@@ -26,22 +26,35 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.kernelspec import (BlockDecl, KernelSpec, register_spec)
 
 MAX_MAG = 0x7FFF
 MAX_BAND = 8                  # leading-axis rows/planes per grid step
-VMEM_BAND_BUDGET = 4 << 20    # bytes of f32 input per band (VMEM headroom)
+VMEM_BAND_BUDGET = 4 << 20    # bytes of band input in VMEM (headroom cap)
 
 
-def _band_for(trailing_elems: int) -> int:
-    """Shrink the band so a band's f32 input stays within the VMEM budget
-    (large 3D fields: a single 1024x1024 plane is 4 MiB)."""
-    return max(1, min(MAX_BAND, VMEM_BAND_BUDGET // max(trailing_elems * 4, 1)))
+def band_for(trailing_elems: int, *, itemsize: int = 4) -> int:
+    """Rows/planes per band so the band's *input* stays within the VMEM
+    budget (large 3D fields: a single 1024x1024 f32 plane is 4 MiB).
+
+    Dtype-aware: the budget divides by the input's real ``itemsize``, so a
+    bf16 input (2 B/elem — kept native in HBM/VMEM, cast to f32 only inside
+    the kernel body) gets twice the band an f32 input does instead of
+    half-utilized bands. The resource analyzer (repro.analysis.resources)
+    cross-checks this helper against its own footprint model.
+    """
+    return max(1, min(MAX_BAND,
+                      VMEM_BAND_BUDGET // max(trailing_elems * itemsize, 1)))
 
 
 def _prequant(x: jax.Array, two_eb: jax.Array) -> jax.Array:
     # divide (not multiply-by-reciprocal): bit-identical to the reference;
-    # reciprocal multiply flips rint at ties and breaks exactness.
-    return jnp.rint(x / two_eb).astype(jnp.int32)
+    # reciprocal multiply flips rint at ties and breaks exactness. The f32
+    # cast makes sub-f32 inputs (bf16 bands kept native for VMEM headroom)
+    # quantize exactly as the reference's pre-cast data: widening is exact.
+    return jnp.rint(x.astype(jnp.float32) / two_eb).astype(jnp.int32)
 
 
 def _to_code(d: jax.Array, code_mode: str) -> jax.Array:
@@ -106,7 +119,10 @@ def lorenzo_quant(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_mag"
     ndim = data.ndim
     if ndim > 3:
         raise ValueError(f"Lorenzo kernel supports 1-3D, got {ndim}D")
-    x = data.astype(jnp.float32)
+    # sub-f32 floats stay native (halved HBM traffic, doubled bands); the
+    # exact widening cast to f32 happens inside the kernel (_prequant)
+    x = data if (jnp.issubdtype(data.dtype, jnp.floating)
+                 and data.dtype.itemsize <= 4) else data.astype(jnp.float32)
     if ndim == 1:
         c = 1024
         n = x.size
@@ -119,7 +135,7 @@ def lorenzo_quant(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_mag"
     trailing_elems = 1
     for s in x.shape[1:]:
         trailing_elems *= s
-    band = _band_for(trailing_elems)
+    band = band_for(trailing_elems, itemsize=x.dtype.itemsize)
     bands = (lead + band - 1) // band
     pad_lead = bands * band - lead
     x = jnp.pad(x, [(0, pad_lead)] + [(0, 0)] * (x.ndim - 1))
@@ -144,9 +160,55 @@ def lorenzo_quant(data: jax.Array, eb: jax.Array, *, code_mode: str = "sign_mag"
                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec(band_block, band_index),
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint16),
+        # bands are independent (the halo is a read-only input view, no
+        # cross-step scratch): declared parallel deliberately
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, x, eb_arr)
 
     if ndim == 1:
         return codes.reshape(-1)[: shape[0]]
     return codes[: shape[0]]
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis declaration (repro.analysis): mirrors the launch above
+# ---------------------------------------------------------------------------
+
+@register_spec("lorenzo_quant")
+def kernel_spec(shape: tuple[int, ...], dtype: str = "float32") -> KernelSpec:
+    """KernelSpec for ``lorenzo_quant`` at one (shape, dtype) point."""
+    itemsize = {"float32": 4, "bfloat16": 2, "float16": 2}[dtype]
+    n = 1
+    for s in shape:
+        n *= s
+    if len(shape) == 1:
+        lead, trailing = -(-n // 1024), (1024,)
+    else:
+        lead, trailing = shape[0], tuple(shape[1:])
+    t_elems = 1
+    for s in trailing:
+        t_elems *= s
+    band = band_for(t_elems, itemsize=itemsize)
+    bands = -(-lead // band)
+    band_block = (band, *trailing)
+    zeros_trail = (0,) * len(trailing)
+    return KernelSpec(
+        name="lorenzo_quant", module=__name__, grid=(bands,),
+        in_blocks=(
+            BlockDecl("x", band_block, dtype,
+                      index_map=lambda i: (i, *zeros_trail)),
+            BlockDecl("halo", (1, *trailing), dtype,
+                      index_map=lambda i: (max(i * band - 1, 0),
+                                           *zeros_trail)),
+            BlockDecl("eb", (1, 1), "float32", index_map=lambda i: (0, 0)),
+        ),
+        out_blocks=(
+            BlockDecl("codes", band_block, "uint16",
+                      index_map=lambda i: (i, *zeros_trail)),
+        ),
+        dimension_semantics=("parallel",),
+        kernel_fn=_make_kernel(1 if len(shape) == 1 else len(shape),
+                               "sign_mag"),
+        point=f"shape={shape} dtype={dtype} band={band}")

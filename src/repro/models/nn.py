@@ -17,7 +17,7 @@ independent of depth (critical for 88-layer dry-runs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

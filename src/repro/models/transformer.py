@@ -12,8 +12,6 @@ Layer params are stacked [L, ...]; the forward pass scans over layers
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

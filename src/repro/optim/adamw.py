@@ -8,7 +8,7 @@ no extra annotations. Global-norm clipping is a tree-wide psum-free reduction
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

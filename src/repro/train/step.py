@@ -13,14 +13,12 @@ same artifacts serve training, serving, and the dry-run compiler.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.dist import bucketed_reduce as bkt
 from repro.dist import compressed_allreduce as car
 from repro.dist import sharding as shd
