@@ -150,7 +150,8 @@ def pool_trace(arch="glm4-9b"):
 
 
 def serving_trace(arch="glm4-9b", smoke=False):
-    """One seeded prefix-skewed trace through radix / copy / off pools.
+    """One seeded prefix-skewed trace through radix / copy / off pools,
+    plus a "radix_entropy" replay (radix sharing + entropy-coded cold tier).
 
     The slab (6 pages) is smaller than the trace's raw demand, so completion
     leans on compress-parking in every mode; the radix rows additionally get
@@ -169,11 +170,17 @@ def serving_trace(arch="glm4-9b", smoke=False):
     reqs = generate(tg)
     raw_demand = sum(-(-len(r.tokens) // 8) + -(-r.n_new // 8) for r in reqs)
     rows = []
-    for mode in ("radix", "copy", "off"):
+    radix_outputs, radix_prefill = None, None
+    for mode in ("radix", "copy", "off", "radix_entropy"):
         # the radix cache is LRU-capped so retained cold containers stay a
-        # bounded overhead against the high-water comparison with "off"
+        # bounded overhead against the high-water comparison with "off".
+        # "radix_entropy" is radix with the cold tier stored as entropy-coded
+        # byte containers (PoolConfig.cold_entropy) — the decode is bit-exact,
+        # so its outputs must be bit-identical to plain radix (CI pins this).
+        prefix_mode = "radix" if mode == "radix_entropy" else mode
         pool_cfg = PoolConfig(num_pages=6, page_size=8, seq_capacity=48,
-                              cold_after=2, eb=1e-4, prefix_mode=mode,
+                              cold_after=2, eb=1e-4, prefix_mode=prefix_mode,
+                              cold_entropy=(mode == "radix_entropy"),
                               max_cached_pages=6 if smoke else 8)
         eng = Engine(model, params, pool=pool_cfg)
         outputs, stats, pool = eng.serve(reqs, max_batch=3)
@@ -181,7 +188,19 @@ def serving_trace(arch="glm4-9b", smoke=False):
         total_prompt = sum(len(r.tokens) for r in reqs)
         assert (stats.prefill_tokens + stats.prefill_tokens_saved
                 == total_prompt), mode
+        extra = {}
+        if mode == "radix":
+            radix_outputs, radix_prefill = outputs, stats.prefill_tokens
+        elif mode == "radix_entropy":
+            ident = (set(outputs) == set(radix_outputs) and
+                     all(np.array_equal(outputs[k], radix_outputs[k])
+                         for k in outputs))
+            assert ident, "entropy cold tier changed served tokens"
+            assert stats.prefill_tokens == radix_prefill, \
+                "entropy cold tier changed prefix-sharing behaviour"
+            extra["bit_identical_to_radix"] = bool(ident)
         rows.append({
+            **extra,
             "name": f"kvpool-serve[{mode}]", "mode": mode,
             "requests": len(reqs), "raw_demand_pages": raw_demand,
             "prefill_tokens": stats.prefill_tokens,

@@ -4,15 +4,26 @@ Synthetic SDRBench-proxy fields (data/fields.py); five relative error bounds;
 FZ vs cuSZ-like / cuSZx-like / cuZFP-like. cuZFP has no error-bounded mode,
 so (faithful to the paper's method) its point is chosen at the bitrate whose
 PSNR is closest to FZ's.
+
+Cold-tier columns: every row also serializes the FZ container both plain and
+with the probe-gated entropy stage (docs/CONTAINER_FORMAT.md) and reports the
+serialized bitrates plus the PSNR *measured from the decoded blob* — decode
+must be bit-exact, so ``fz_cold_psnr == fz_psnr`` is asserted, making the
+"extra ratio at equal distortion" claim self-checking. ``probe_section``
+pins the skip probe: on incompressible noise the exact-size histogram probe
+rejects the entropy stage at a small fraction of what a wasted encode would
+have cost; scripts/ci.sh bench asserts both behaviours from BENCH_ci.json.
 """
 from __future__ import annotations
+
+import struct
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, fz, metrics
+from repro.core import baselines, entropy as ent, fz, metrics
 from repro.data import FIELD_KINDS, make_field
-from .common import PAPER_EBS
+from .common import PAPER_EBS, timeit
 
 
 def run(shape=(64, 64, 64), kinds=FIELD_KINDS, ebs=PAPER_EBS):
@@ -27,6 +38,20 @@ def run(shape=(64, 64, 64), kinds=FIELD_KINDS, ebs=PAPER_EBS):
             eb_abs = float(c.eb_abs)
             psnr_fz = float(metrics.psnr(f, rec))
             br_fz = br(float(c.used_bytes()))
+
+            # cold tier: serialized container, plain vs probe-gated entropy
+            plain = fz.to_bytes(c, cfg, entropy=False)
+            t_cold = timeit(lambda: fz.to_bytes(c, cfg, entropy="auto"),
+                            warmup=0, iters=1)
+            cold = fz.to_bytes(c, cfg, entropy="auto")
+            selected = bool(struct.unpack_from("<H", cold, 6)[0]
+                            & fz.FLAG_ENTROPY)
+            t_dec = timeit(lambda: fz.decompress_bytes(cold),
+                           warmup=0, iters=1)
+            rec_cold = fz.decompress_bytes(cold)
+            assert jnp.array_equal(rec_cold, rec), (kind, eb)
+            psnr_cold = float(metrics.psnr(f, rec_cold))
+
             cz = baselines.cusz_like(np.asarray(f), eb_abs)
             psnr_cz = float(metrics.psnr(f, jnp.asarray(cz.reconstruction)))
             br_cz = br(cz.compressed_bytes)
@@ -42,21 +67,73 @@ def run(shape=(64, 64, 64), kinds=FIELD_KINDS, ebs=PAPER_EBS):
                     best = (p, br(float(bz)), rate)
             rows.append(dict(kind=kind, eb=eb,
                              fz_bitrate=br_fz, fz_psnr=psnr_fz,
+                             fz_plain_bitrate=br(len(plain)),
+                             fz_cold_bitrate=br(len(cold)),
+                             fz_cold_psnr=psnr_cold,
+                             entropy_selected=selected,
+                             cold_encode_ms=t_cold * 1e3,
+                             cold_decode_ms=t_dec * 1e3,
                              cusz_bitrate=br_cz, cusz_psnr=psnr_cz,
                              cuszx_bitrate=br_x, cuszx_psnr=psnr_x,
                              cuzfp_bitrate=best[1], cuzfp_psnr=best[0]))
     return rows
 
 
-def main():
-    rows = run()
-    print("kind,eb,fz_br,fz_psnr,cusz_br,cusz_psnr,cuszx_br,cuszx_psnr,cuzfp_br,cuzfp_psnr")
+def probe_section(smoke: bool = False) -> dict:
+    """Skip-probe cost model on one compressible / one incompressible buffer.
+
+    The probe is a byte histogram plus a 256-symbol Huffman plan — it knows
+    the *exact* encoded size without touching the bitstream, so rejecting
+    the entropy stage on noise costs a fraction of the encode it avoids."""
+    n = (1 << 18) if smoke else (1 << 20)
+    rng = np.random.default_rng(3)
+    bufs = {
+        "skew": np.minimum(rng.gamma(1.0, 8.0, n), 255).astype(np.uint8),
+        "noise": rng.integers(0, 256, n, dtype=np.uint8),
+    }
+    out = {}
+    for name, arr in bufs.items():
+        data = arr.tobytes()
+        counts = np.bincount(arr, minlength=256)
+        _, planned = ent.plan(counts, n, ent.DEFAULT_CHUNK)
+        t_probe = timeit(
+            lambda: ent.plan(np.bincount(np.frombuffer(data, np.uint8),
+                                         minlength=256), n, ent.DEFAULT_CHUNK),
+            warmup=1, iters=3)
+        t_encode = timeit(lambda: ent.encode(data), warmup=1, iters=3)
+        out[name] = {
+            "n_bytes": n,
+            "planned_bytes": int(planned),
+            # same gate to_bytes applies: the stage must win the min gain
+            "selected": bool(planned < n * (1.0 - fz.ENTROPY_MIN_GAIN)),
+            "probe_ms": t_probe * 1e3,
+            "encode_ms": t_encode * 1e3,
+            "probe_frac": t_probe / t_encode,
+        }
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    kw = dict(shape=(48, 48, 48), ebs=(1e-2, 1e-3)) if smoke else {}
+    rows = run(**kw)
+    print("kind,eb,fz_br,fz_psnr,cold_br(plain_br),cold_psnr,entropy,"
+          "cusz_br,cusz_psnr,cuszx_br,cuszx_psnr,cuzfp_br,cuzfp_psnr")
     for r in rows:
-        print(f"{r['kind']},{r['eb']:.0e},{r['fz_bitrate']:.2f},{r['fz_psnr']:.1f},"
+        print(f"{r['kind']},{r['eb']:.0e},{r['fz_bitrate']:.2f},"
+              f"{r['fz_psnr']:.1f},"
+              f"{r['fz_cold_bitrate']:.2f}({r['fz_plain_bitrate']:.2f}),"
+              f"{r['fz_cold_psnr']:.1f},"
+              f"{'y' if r['entropy_selected'] else 'n'},"
               f"{r['cusz_bitrate']:.2f},{r['cusz_psnr']:.1f},"
               f"{r['cuszx_bitrate']:.2f},{r['cuszx_psnr']:.1f},"
               f"{r['cuzfp_bitrate']:.2f},{r['cuzfp_psnr']:.1f}")
-    return rows
+    probe = probe_section(smoke=smoke)
+    print("probe,n_bytes,planned_bytes,selected,probe_ms,encode_ms,frac")
+    for name, p in probe.items():
+        print(f"probe[{name}],{p['n_bytes']},{p['planned_bytes']},"
+              f"{'y' if p['selected'] else 'n'},{p['probe_ms']:.2f},"
+              f"{p['encode_ms']:.2f},{p['probe_frac']:.3f}")
+    return {"rows": rows, "probe": probe}
 
 
 if __name__ == "__main__":

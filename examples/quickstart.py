@@ -1,6 +1,9 @@
 """Quickstart: error-bounded lossy compression of a scientific field.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The same flow (at smaller shapes) is the README.md quickstart snippet, which
+CI's docs check executes on every PR (repro.testing.docsnippets).
 """
 import jax.numpy as jnp
 
@@ -10,16 +13,39 @@ from repro.data import make_field
 
 def main():
     field = jnp.asarray(make_field("turbulent", (128, 128, 64), seed=0))
-    print(f"field: {field.shape} float32, {field.size * 4 / 1e6:.1f} MB")
+    raw_mb = field.size * field.dtype.itemsize / 1e6   # dtype-correct bytes
+    print(f"field: {field.shape} {field.dtype}, {raw_mb:.1f} MB")
 
     for eb in (1e-2, 1e-3, 1e-4):
         cfg = fz.FZConfig(eb=eb, eb_mode="rel")        # paper-style relative bound
         rec, comp = fz.roundtrip(field, cfg)
-        print(f"eb=1e{int(jnp.log10(eb))}: "
+        print(f"eb={eb:g}: "
               f"CR={float(comp.compression_ratio()):6.2f}x  "
               f"PSNR={float(metrics.psnr(field, rec)):6.2f} dB  "
               f"max|err|={float(metrics.max_abs_err(field, rec)):.3e} "
               f"(bound {float(comp.eb_abs):.3e})")
+
+    # source-dtype accounting: a bfloat16 input is charged 2 bytes/value
+    # (comp.raw_bytes() == n * 2, not the float32-inflated n * 4), so the
+    # printed ratio is honest for half-precision slabs like KV caches
+    bf = field.astype(jnp.bfloat16)
+    cfg = fz.FZConfig(eb=1e-3, eb_mode="rel")
+    comp = fz.compress(bf, cfg)
+    assert int(comp.raw_bytes()) == bf.size * 2
+    print(f"bfloat16 source: raw {int(comp.raw_bytes()) / 1e6:.1f} MB, "
+          f"CR={float(comp.compression_ratio()):.2f}x (dtype-correct)")
+
+    # cold tier: serialize to the versioned byte container, optionally with
+    # the second-stage entropy coder (docs/CONTAINER_FORMAT.md); decode
+    # routes on the header flag and reconstruction is bit-exact
+    cfg = fz.FZConfig(eb=1e-3, eb_mode="rel")
+    comp = fz.compress(field, cfg)
+    plain = fz.to_bytes(comp, cfg, entropy=False)
+    cold = fz.to_bytes(comp, cfg, entropy="auto")
+    assert jnp.array_equal(fz.decompress_bytes(cold), fz.decompress(comp, cfg))
+    print(f"cold tier: plain {len(plain) / 1e6:.2f} MB -> "
+          f"entropy {len(cold) / 1e6:.2f} MB "
+          f"(x{len(plain) / len(cold):.2f} on top of FZ)")
 
     # kernel path (Pallas, interpret-mode on CPU; Mosaic on TPU)
     cfg = fz.FZConfig(eb=1e-3, use_kernels=True, exact_outliers=False)

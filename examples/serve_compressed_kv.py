@@ -5,8 +5,10 @@ template pool, so most requests share a long prompt prefix — the production
 shape the radix page table is built for. The pool completes a trace whose
 raw demand exceeds the slab because (a) matched prefixes are *mapped*, not
 re-prefilled (one physical page serves every reader; writes copy-on-write),
-(b) cold pages tier down to FZ-compressed containers, freeing their slots,
-and (c) preempted sequences are compress-parked instead of recomputed.
+(b) cold pages tier down to entropy-coded FZ byte containers
+(``PoolConfig.cold_entropy``, docs/CONTAINER_FORMAT.md), freeing their
+slots, and (c) preempted sequences are compress-parked instead of
+recomputed.
 Every request's tokens are checked against the never-parked whole-cache
 oracle (``Engine.generate``).
 
@@ -36,7 +38,8 @@ def build(smoke: bool, kernels: bool = False):
     if smoke:
         cfg = configs.get("glm4-9b", smoke=True)
         pool = PoolConfig(num_pages=3, page_size=8, seq_capacity=32,
-                          cold_after=1, eb=1e-4, use_kernels=kernels)
+                          cold_after=1, eb=1e-4, use_kernels=kernels,
+                          cold_entropy=True)
         tg = TraceGenConfig(seed=1, n_requests=4, vocab=cfg.vocab,
                             arrival_rate=2.0, n_templates=1,
                             template_len=(12, 12), template_reuse=0.9,
@@ -53,7 +56,7 @@ def build(smoke: bool, kernels: bool = False):
         # compress-park victims, not just tier cold pages
         pool = PoolConfig(num_pages=4, page_size=16, seq_capacity=128,
                           cold_after=2, eb=1e-4, use_kernels=kernels,
-                          max_cached_pages=6)
+                          max_cached_pages=6, cold_entropy=True)
         tg = TraceGenConfig(seed=4, n_requests=8, vocab=cfg.vocab,
                             arrival_rate=1.0, n_templates=2,
                             template_len=(32, 48), template_reuse=0.75,
@@ -146,8 +149,20 @@ def main():
         f"fz decompress dispatches {fz_decomp} != pool "
         f"{stats.decompress_dispatches}")
     assert not obs.violations(), f"sentinel violations: {obs.violations()}"
+    # entropy cold tier: parked pages were serialized through to_bytes with
+    # the probe-gated entropy stage — the counters prove the tier ran, and
+    # the zero-violations assert above covered its bit-exact decode path
+    ent_ops = {k: v for k, v in snap["counters"].items()
+               if k.startswith("entropy_stage{")}
+    assert any("tier=kv_cold_entropy" in k for k in ent_ops), \
+        f"entropy cold tier never exercised: {sorted(ent_ops)}"
+    n_sel = sum(v for k, v in ent_ops.items()
+                if "op=encode" in k and "selected=true" in k)
+    n_skip = sum(v for k, v in ent_ops.items()
+                 if "op=encode" in k and "selected=false" in k)
     print(f"telemetry: {fz_decomp} fz decompress dispatches == pool "
-          f"accounting; 0 sentinel violations")
+          f"accounting; entropy stage on {n_sel} parked containers "
+          f"({n_skip} probe-skipped); 0 sentinel violations")
     obs_cli.finish(args, metadata={"arch": cfg.arch_id,
                                    "mode": "serve-prefix-shared"})
 

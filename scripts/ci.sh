@@ -52,6 +52,11 @@ PY
     # interpret-mode Pallas flash-decode kernel (page-native gather) + FZ
     # kernel stages; asserts >= 90% token agreement with the oracle
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/serve_compressed_kv.py --smoke --kernels
+    # docs check: execute every fenced ```python block in the README and the
+    # docs pages (repro.testing.docsnippets) — documented examples are part
+    # of the test surface, so a renamed API breaks CI, not the reader
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.testing.docsnippets \
+        README.md docs/ARCHITECTURE.md docs/CONTAINER_FORMAT.md
     ;;
   slow) exec python -m pytest -q -m slow ;;
   analyze)
@@ -71,13 +76,14 @@ PY
     ;;
   bench)
     # perf-trajectory smoke: tiny-shape kvcache decode, the barrier-vs-
-    # bucketed overlap sweep, AND compressor throughput (compress/decompress
+    # bucketed overlap sweep, compressor throughput (compress/decompress
     # GB/s + ratio for the reference / staged / fused execution paths over a
-    # small shape grid) — one machine-readable BENCH_ci.json at the repo root
+    # small shape grid), AND the rate-distortion frontier with the entropy
+    # cold tier — one machine-readable BENCH_ci.json at the repo root
     # (the workflow uploads it as an artifact — every CI run appends a
     # datapoint to the trajectory instead of leaving BENCH_* empty)
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
-        --only throughput,kvcache,overlap --smoke --json-out BENCH_ci.json
+        --only throughput,kvcache,overlap,rate_distortion --smoke --json-out BENCH_ci.json
     python - <<'PY'
 import json
 doc = json.load(open("BENCH_ci.json"))
@@ -88,6 +94,9 @@ assert doc["sections"]["kvcache"]["decode_ms"], "kvcache decode rows missing"
 trows = doc["sections"]["throughput"]["rows"]
 paths = {r["path"] for r in trows}
 assert {"reference", "staged", "fused"} <= paths, f"missing FZ paths: {paths}"
+# hot-path-unchanged guard: the throughput section must stay pure-FZ — the
+# entropy stage is cold-tier only and must never appear as a hot path
+assert not any("entropy" in p for p in paths), f"entropy leaked into hot paths: {paths}"
 for d in ("compress", "decompress"):
     n = sum(1 for r in trows if r["direction"] == d and r["path"] in
             ("reference", "staged", "fused"))
@@ -107,10 +116,32 @@ assert radix["high_water_bytes"] <= off["high_water_bytes"], \
 assert radix["shared_cold_reads_deduped"] > 0, "dedup path never exercised"
 assert radix["decompressions"] < copy["decompressions"], \
     "dedup did not reduce cold decodes vs private copies"
+# entropy-coded cold tier: the radix_entropy replay (same trace, cold pages
+# stored as entropy-coded byte containers) must be numerically invisible
+rent = by_mode["radix_entropy"]
+assert rent["bit_identical_to_radix"] is True, "entropy cold tier changed tokens"
+assert rent["prefill_tokens"] == radix["prefill_tokens"], \
+    "entropy cold tier changed prefix sharing"
 for r in srows:
     for f in ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
               "ttft_slo_attained", "itl_slo_attained"):
         assert f in r, f"serving row {r['mode']} missing {f}"
+# entropy cold tier frontier: on >= 2 field kinds the entropy-coded container
+# must be strictly smaller than the plain container at bit-exact-equal PSNR
+# (fz_cold_psnr is measured from the decoded blob, so equality IS the
+# bit-exactness proof); the skip probe must reject incompressible noise and
+# cost a bounded fraction of the encode it avoids
+rd = doc["sections"]["rate_distortion"]
+better = {r["kind"] for r in rd["rows"]
+          if r["entropy_selected"]
+          and r["fz_cold_bitrate"] < r["fz_plain_bitrate"]
+          and r["fz_cold_psnr"] == r["fz_psnr"]}
+assert len(better) >= 2, f"entropy cold tier won on too few field kinds: {better}"
+probe = rd["probe"]
+assert probe["skew"]["selected"], "probe rejected a compressible buffer"
+assert not probe["noise"]["selected"], "probe accepted incompressible noise"
+assert probe["noise"]["probe_ms"] < probe["noise"]["encode_ms"], \
+    "skip probe costs more than the encode it avoids"
 # telemetry: the embedded registry snapshot must be schema-complete, carry
 # the FZ dispatch counters the run produced, and report zero sentinel
 # violations; the eager-wrapper instrumentation overhead is pinned < 5%
@@ -123,6 +154,8 @@ assert any(k.startswith("span_ms{") for k in snap["histograms"]), \
 for k, h in snap["histograms"].items():
     assert {"count", "sum", "min", "max", "p50", "p99"} <= set(h), k
 assert not snap["sentinel_violations"], snap["sentinel_violations"]
+assert any(k.startswith("entropy_stage{") for k in snap["counters"]), \
+    "no entropy_stage counters in metrics_snapshot"
 oh = doc["sections"]["throughput"]["obs_overhead"]
 assert oh["overhead_frac"] < 0.05, \
     f"obs overhead {oh['overhead_frac']:.1%} exceeds the 5% pin"
@@ -130,7 +163,10 @@ print(f"BENCH_ci.json OK: sections={sorted(doc['sections'])}, "
       f"{len(rows)} overlap rows, {len(trows)} compressor rows, "
       f"{len(srows)} serving rows "
       f"(radix {radix['prefill_tokens']} vs off {off['prefill_tokens']} "
-      f"prefill tokens); obs overhead {oh['overhead_frac']:.2%}, "
+      f"prefill tokens, radix_entropy bit-identical); "
+      f"entropy cold tier better on {sorted(better)}; "
+      f"probe frac {probe['noise']['probe_frac']:.2f}; "
+      f"obs overhead {oh['overhead_frac']:.2%}, "
       f"{sum(1 for k in snap['counters'] if k.startswith('fz_dispatches'))} "
       f"fz dispatch counters, 0 sentinel violations")
 PY

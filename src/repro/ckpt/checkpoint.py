@@ -3,7 +3,7 @@
 Layout (one directory per step):
     <root>/step_000123/
         manifest.json     # leaf paths, shapes, dtypes, checksums, codec, meta
-        <leaf-000...>.bin # raw little-endian bytes or FZ stream
+        <leaf-000...>.bin # raw little-endian bytes or a serialized FZ container
     <root>/LATEST         # atomically-renamed pointer file
 
 Fault-tolerance contract (exercised by tests/test_ckpt.py):
@@ -15,6 +15,16 @@ Fault-tolerance contract (exercised by tests/test_ckpt.py):
   * codec "fz": error-bounded lossy compression of float leaves (the paper's
     GPU->disk use case, §2.4) with exact outliers ON; small/int leaves stay
     raw. The manifest records exact compressed bytes for the ratio report.
+
+FZ leaves are stored as the versioned byte container of
+``fz.to_bytes`` (spec: docs/CONTAINER_FORMAT.md) with the second-stage
+entropy coder in ``"auto"`` mode — checkpoints are the canonical cold tier
+(arXiv 2507.11165's lossy-lossless orchestration: save latency buys extra
+ratio; the probe skips leaves the Huffman stage cannot shrink). Restore
+routes on the container header, so checkpoints written *before* the format
+was versioned (the headerless pre-v1 stream) restore unchanged via
+``fz.from_bytes``'s legacy fallback; the whole-checkpoint achieved ratio
+feeds the ``ckpt`` tier EWMA (`repro.obs.sentinels`).
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ try:  # register "bfloat16" et al. with numpy's dtype registry
 except ImportError:
     pass
 
+from repro import obs
 from repro.core import fz
 
 _FZ_CKPT = fz.FZConfig(eb=1e-5, eb_mode="rel", exact_outliers=True,
@@ -46,44 +57,19 @@ def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
 
 
 def _serialize_fz(arr: np.ndarray) -> bytes:
-    """Host-side exact FZ byte stream (header + bitflags + blocks + outliers)."""
+    """One float leaf -> a serialized v1 FZ container, entropy-probe gated
+    (docs/CONTAINER_FORMAT.md). Flattened: the container records shape (n,);
+    the manifest keeps the real shape/dtype for reconstruction."""
     x = jnp.asarray(arr.reshape(-1), jnp.float32)
     c = fz.compress(x, _FZ_CKPT)
-    nnz = int(c.nnz_blocks)
-    n_out = int(c.n_outliers)
-    parts = [
-        np.asarray([arr.size, nnz, n_out], np.int64).tobytes(),
-        np.asarray(c.eb_abs, np.float32).tobytes(),
-        np.asarray(c.bitflags).tobytes(),
-        np.asarray(c.payload)[:nnz].tobytes(),
-        np.asarray(c.outlier_idx)[:n_out].tobytes(),
-        np.asarray(c.outlier_val)[:n_out].tobytes(),
-    ]
-    return b"".join(parts)
+    return fz.to_bytes(c, _FZ_CKPT, entropy="auto", tier="ckpt")
 
 
 def _deserialize_fz(raw: bytes, shape, dtype) -> np.ndarray:
-    n, nnz, n_out = np.frombuffer(raw[:24], np.int64)
-    eb = np.frombuffer(raw[24:28], np.float32)[0]
-    off = 28
-    nb = fz.FZConfig.n_blocks(int(n))
-    nflag_words = (nb + 31) // 32
-    bitflags = np.frombuffer(raw[off:off + 4 * nflag_words], np.uint32); off += 4 * nflag_words
-    payload = np.frombuffer(raw[off:off + 16 * int(nnz)], np.uint16).reshape(int(nnz), 8); off += 16 * int(nnz)
-    oidx = np.frombuffer(raw[off:off + 4 * int(n_out)], np.int32); off += 4 * int(n_out)
-    oval = np.frombuffer(raw[off:off + 4 * int(n_out)], np.int32)
-    cap = _FZ_CKPT.payload_capacity(int(n))
-    pay = np.zeros((cap, 8), np.uint16)
-    pay[: int(nnz)] = payload
-    ocap = _FZ_CKPT.outlier_capacity(int(n))
-    oi = np.full((ocap,), int(n), np.int32); oi[: int(n_out)] = oidx
-    ov = np.zeros((ocap,), np.int32); ov[: int(n_out)] = oval
-    c = fz.FZCompressed(
-        bitflags=jnp.asarray(bitflags), payload=jnp.asarray(pay),
-        nnz_blocks=jnp.int32(nnz), outlier_idx=jnp.asarray(oi),
-        outlier_val=jnp.asarray(ov), n_outliers=jnp.int32(n_out),
-        eb_abs=jnp.float32(eb), shape=(int(n),), dtype_name="float32")
-    rec = np.asarray(fz.decompress(c, _FZ_CKPT))
+    """Reconstruct a leaf from any supported container version — v1 (with or
+    without the entropy stage, routed by the header flag) or the legacy
+    headerless pre-versioning stream."""
+    rec = np.asarray(fz.decompress_bytes(raw, tier="ckpt"))
     return rec.astype(dtype).reshape(shape)
 
 
@@ -109,6 +95,13 @@ def save(root: str, step: int, tree: Any, *, meta: dict | None = None,
             "crc32": zlib.crc32(raw), "bytes": len(raw),
             "raw_bytes": int(leaf.nbytes),
         })
+    if codec == "fz":
+        # one whole-checkpoint ratio sample per save: stable across saves of
+        # the same model, unlike per-leaf ratios (embeddings vs layernorms
+        # legitimately differ by more than the drift factor)
+        obs.note_ratio("ckpt",
+                       sum(l["raw_bytes"] for l in manifest["leaves"])
+                       / max(sum(l["bytes"] for l in manifest["leaves"]), 1))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):

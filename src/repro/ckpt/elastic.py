@@ -12,6 +12,11 @@ sharding.py), no model or optimizer code changes across mesh shapes; the only
 constraint is divisibility, which resolve_spec relaxes to replication when
 violated. Data-stream determinism across rescaling is provided by
 data/tokens.py (shard assignment is a pure function of step and index).
+
+Codec-independent: ``ckpt.restore`` decodes each leaf on the host (raw bytes
+or an FZ byte container of any supported version — docs/CONTAINER_FORMAT.md)
+before ``device_put`` to the new shards, so rescaling works identically for
+raw and fz-codec checkpoints, including pre-versioning ones.
 """
 from __future__ import annotations
 

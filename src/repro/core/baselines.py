@@ -13,6 +13,12 @@
   faithfully to cuZFP (§2.4).
 
 These exist so every paper table/figure has both sides implemented in-repo.
+They are deliberately host-side / proxy-grade: the real system under test is
+`core/fz.py` (+ the optional `core/entropy.py` cold-tier stage); the
+baselines only have to be ratio-exact for `benchmarks/bench_rate_distortion`
+(docs/ARCHITECTURE.md maps which bench pins which layer).  The Huffman
+builder used by ``cusz_like`` is the same one the entropy cold tier uses —
+it lives in `core.entropy.huffman_code_lengths`.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ from functools import partial
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.core.entropy import huffman_code_lengths as _huffman_code_lengths
 
 
 # ---------------------------------------------------------------------------
@@ -39,30 +47,6 @@ class CuszLikeResult:
 
     def compression_ratio(self, raw_bytes: int) -> float:
         return raw_bytes / self.compressed_bytes
-
-
-def _huffman_code_lengths(counts: np.ndarray) -> np.ndarray:
-    """Code lengths of a Huffman code for symbol counts (package-free, O(n log n))."""
-    sym = np.nonzero(counts)[0]
-    if sym.size == 0:
-        return np.zeros_like(counts)
-    if sym.size == 1:
-        lengths = np.zeros_like(counts)
-        lengths[sym[0]] = 1
-        return lengths
-    import heapq
-    heap = [(int(counts[s]), i, [s]) for i, s in enumerate(sym)]
-    heapq.heapify(heap)
-    lengths = np.zeros_like(counts)
-    uid = len(heap)
-    while len(heap) > 1:
-        c1, _, s1 = heapq.heappop(heap)
-        c2, _, s2 = heapq.heappop(heap)
-        for s in s1 + s2:
-            lengths[s] += 1
-        heapq.heappush(heap, (c1 + c2, uid, s1 + s2))
-        uid += 1
-    return lengths
 
 
 def cusz_like(data: np.ndarray, eb_abs: float) -> CuszLikeResult:

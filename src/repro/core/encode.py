@@ -26,6 +26,17 @@ BLOCK_BYTES = 2 * BLOCK_WORDS
 FLAGS_PER_WORD = 32      # bit flags packed per u32
 
 
+def flag_words(n_blocks: int) -> int:
+    """u32 words in the packed bit-flag array: ceil(n_blocks / 32).
+
+    This is the stored form — what ``pack_bitflags`` produces and what v1
+    serialized containers carry verbatim (docs/CONTAINER_FORMAT.md);
+    ``used_bytes`` models the ideal (n_blocks+7)//8 bit packing for ratio
+    accounting.
+    """
+    return -(-n_blocks // FLAGS_PER_WORD)
+
+
 def block_flags(shuffled: jax.Array) -> jax.Array:
     """(n_words,) u16 -> (n_blocks,) bool non-zero flags."""
     if shuffled.size % BLOCK_WORDS:

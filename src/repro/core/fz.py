@@ -44,15 +44,18 @@ roundtrip checks must not pollute the dispatch accounting they audit.
 from __future__ import annotations
 
 import dataclasses
+import struct
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 
 from . import encode as enc
+from . import entropy as ent
 from . import quant, shuffle
 
 
@@ -374,3 +377,251 @@ def tree_decompress(tree: Any, cfg: FZConfig, dtypes: Any | None = None) -> Any:
     if dtypes is not None:
         out = jax.tree.map(lambda x, d: x.astype(d), out, dtypes)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Serialized byte containers (cold tier / checkpoints)
+#
+# The pytree container above is the hot-path wire format: fixed shapes,
+# jit/collective-safe, capacity-padded. When a container leaves the compute
+# graph — parked KV pages, checkpoint leaves — it is serialized to the exact
+# versioned byte stream below, optionally with the second-stage entropy coder
+# (core/entropy.py) over the payload bytes. Byte-level spec + version
+# history: docs/CONTAINER_FORMAT.md. Everything here is host-side numpy and
+# must never be called from inside a trace.
+# ---------------------------------------------------------------------------
+
+CONTAINER_MAGIC = b"FZGC"
+CONTAINER_VERSION = 1
+
+FLAG_ENTROPY = 1 << 0    # payload section is a core.entropy blob
+FLAG_ZIGZAG = 1 << 1     # zigzag quantization codes (else sign-magnitude)
+FLAG_OUTLIERS = 1 << 2   # exact-outlier channel present in the stream
+
+ENTROPY_MIN_GAIN = 0.02      # probe must predict >= 2% saving to encode
+_MIN_ENTROPY_BYTES = 256     # below this the blob overhead can't win
+
+_DTYPE_CODES = {"float32": 0, "bfloat16": 1, "float16": 2, "float64": 3}
+_DTYPE_NAMES = {v: k for k, v in _DTYPE_CODES.items()}
+
+_HDR = struct.Struct("<4sHHBBH")   # magic, version, flags, ndim, dtype, rsvd
+_TAIL = struct.Struct("<QQfQ")     # nnz, n_outliers, eb_abs, payload_len
+_LEGACY_HDR_BYTES = 28             # i64 n/nnz/n_out + f32 eb (pre-v1 streams)
+
+
+class FZFormatError(ValueError):
+    """Raised for malformed, truncated, or unsupported serialized containers."""
+
+
+def to_bytes(c: FZCompressed, cfg: FZConfig, *, entropy: bool | str = "auto",
+             chunk_bytes: int = ent.DEFAULT_CHUNK,
+             tier: str | None = None) -> bytes:
+    """Serialize a container to the exact v1 byte stream.
+
+    ``entropy``: ``"auto"`` probes the payload byte histogram
+    (`core.entropy.plan`) and entropy-codes only when the *exact* predicted
+    blob is >= ``ENTROPY_MIN_GAIN`` smaller; ``True``/``False`` force the
+    choice. The selection is recorded in the header flags so
+    :func:`from_bytes` routes transparently. ``tier`` labels the
+    ``entropy_stage`` counters. Ratio-EWMA feeding (`obs.note_ratio`) is
+    deliberately left to callers — they know their sampling discipline; a
+    per-call EWMA here would let ordinary page-to-page variance trip the
+    ratio-drift sentinel.
+    """
+    if entropy not in (True, False, "auto"):
+        raise ValueError(f"entropy must be True/False/'auto', got {entropy!r}")
+    if c.dtype_name not in _DTYPE_CODES:
+        raise FZFormatError(f"unserializable container dtype {c.dtype_name!r}")
+    nnz = int(c.nnz_blocks)
+    rows = min(nnz, int(c.payload.shape[0]))
+    n_out = int(c.n_outliers)
+    payload = np.asarray(c.payload)[:rows].astype("<u2").tobytes()
+
+    selected = False
+    body = payload
+    if entropy is True or (entropy == "auto"
+                           and len(payload) >= _MIN_ENTROPY_BYTES):
+        counts = np.bincount(np.frombuffer(payload, np.uint8), minlength=256)
+        lengths, est = ent.plan(counts, len(payload), chunk_bytes)
+        if entropy is True or est <= len(payload) * (1.0 - ENTROPY_MIN_GAIN):
+            blob = ent.encode(payload, chunk_bytes, lengths=lengths)
+            if entropy is True or len(blob) < len(payload):
+                selected, body = True, blob
+    obs.counter("entropy_stage", op="encode",
+                selected=str(selected).lower(), tier=tier or "adhoc").inc()
+
+    flags = ((FLAG_ENTROPY if selected else 0)
+             | (FLAG_ZIGZAG if cfg.code_mode == "zigzag" else 0)
+             | (FLAG_OUTLIERS if cfg.exact_outliers else 0))
+    parts = [
+        _HDR.pack(CONTAINER_MAGIC, CONTAINER_VERSION, flags, len(c.shape),
+                  _DTYPE_CODES[c.dtype_name], 0),
+        np.asarray(c.shape, "<u8").tobytes(),
+        _TAIL.pack(nnz, n_out, float(c.eb_abs), len(body)),
+        np.asarray(c.bitflags).astype("<u4").tobytes(),
+        body,
+    ]
+    if flags & FLAG_OUTLIERS:
+        parts.append(np.asarray(c.outlier_idx)[:n_out].astype("<i4").tobytes())
+        parts.append(np.asarray(c.outlier_val)[:n_out].astype("<i4").tobytes())
+    return b"".join(parts)
+
+
+def _np_slice(raw: memoryview, dtype: str, count: int, offset: int,
+              what: str) -> np.ndarray:
+    itemsize = np.dtype(dtype).itemsize
+    if offset + count * itemsize > len(raw):
+        raise FZFormatError(f"container truncated in {what} section "
+                            f"({len(raw)} bytes)")
+    return np.frombuffer(raw, dtype, count, offset)
+
+
+def from_bytes(raw: bytes, *, capacity: int | None = None,
+               outlier_capacity: int | None = None,
+               tier: str | None = None) -> tuple[FZCompressed, FZConfig]:
+    """Parse a serialized container back into the fixed-shape pytree form.
+
+    Reconstruction is *bit-exact*: payload rows past ``nnz`` are zero,
+    outlier index slots past ``n_outliers`` hold ``n`` and value slots 0 —
+    the same fill conventions ``compress`` produces — so a deserialized
+    container is leaf-identical to the one serialized (at equal capacities)
+    and safe to stack into vmapped batch decodes. ``capacity`` /
+    ``outlier_capacity`` override the padded sizes (the kvpool passes its
+    pool-wide capacities so blob-backed pages stack with slot-backed ones);
+    defaults are the tightest sizes that decode exactly.
+
+    Streams without the ``FZGC`` magic are parsed as the legacy headerless
+    checkpoint stream written before the format was versioned; a version
+    newer than ``CONTAINER_VERSION`` raises :class:`FZFormatError`.
+
+    Returns ``(container, cfg)`` where ``cfg`` carries the decode-relevant
+    statics (code_mode, exact_outliers) — its ``eb`` field is fixed at 0.0
+    (the real bound travels in ``container.eb_abs``; keeping ``cfg`` constant
+    avoids a retrace per distinct bound).
+    """
+    raw = memoryview(raw)
+    if bytes(raw[:4]) != CONTAINER_MAGIC:
+        return _from_legacy_bytes(raw, capacity=capacity,
+                                  outlier_capacity=outlier_capacity, tier=tier)
+    if len(raw) < _HDR.size + _TAIL.size:
+        raise FZFormatError(f"container truncated: {len(raw)} bytes")
+    _, version, flags, ndim, dtcode, _ = _HDR.unpack_from(raw, 0)
+    if version != CONTAINER_VERSION:
+        raise FZFormatError(
+            f"FZ container version {version} is not supported by this build "
+            f"(max {CONTAINER_VERSION}); upgrade repro or re-serialize with "
+            f"a matching version")
+    if dtcode not in _DTYPE_NAMES:
+        raise FZFormatError(f"unknown container dtype code {dtcode}")
+    off = _HDR.size
+    shape = tuple(int(v) for v in _np_slice(raw, "<u8", ndim, off, "shape"))
+    off += 8 * ndim
+    nnz, n_out, eb_abs, payload_len = _TAIL.unpack_from(raw, off)
+    off += _TAIL.size
+    n = 1
+    for s in shape:
+        n *= s
+    fw = enc.flag_words(FZConfig.n_blocks(n))
+    bitflags = _np_slice(raw, "<u4", fw, off, "bitflags").copy()
+    off += 4 * fw
+    if off + payload_len > len(raw):
+        raise FZFormatError(f"container truncated in payload section "
+                            f"({len(raw)} bytes)")
+    body = bytes(raw[off:off + payload_len])
+    off += payload_len
+    if flags & FLAG_ENTROPY:
+        body = ent.decode(body)
+    obs.counter("entropy_stage", op="decode",
+                selected=str(bool(flags & FLAG_ENTROPY)).lower(),
+                tier=tier or "adhoc").inc()
+
+    rows = len(body) // enc.BLOCK_BYTES
+    cap = max(rows, 1) if capacity is None else capacity
+    if cap < rows:
+        raise FZFormatError(f"capacity {cap} < {rows} stored payload rows")
+    payload = np.zeros((cap, enc.BLOCK_WORDS), np.uint16)
+    payload[:rows] = np.frombuffer(body, "<u2").reshape(rows, enc.BLOCK_WORDS)
+
+    if flags & FLAG_OUTLIERS:
+        oidx = _np_slice(raw, "<i4", n_out, off, "outlier idx")
+        off += 4 * n_out
+        oval = _np_slice(raw, "<i4", n_out, off, "outlier val")
+        ocap = max(n_out, 1) if outlier_capacity is None else outlier_capacity
+        if ocap < n_out:
+            raise FZFormatError(f"outlier_capacity {ocap} < {n_out} stored")
+    else:
+        oidx = oval = np.zeros(0, np.int32)
+        ocap = outlier_capacity or 0
+    oi = np.full((ocap,), n, np.int32)
+    oi[:n_out if flags & FLAG_OUTLIERS else 0] = oidx
+    ov = np.zeros((ocap,), np.int32)
+    ov[:n_out if flags & FLAG_OUTLIERS else 0] = oval
+
+    c = FZCompressed(
+        bitflags=jnp.asarray(bitflags), payload=jnp.asarray(payload),
+        nnz_blocks=jnp.int32(nnz), outlier_idx=jnp.asarray(oi),
+        outlier_val=jnp.asarray(ov), n_outliers=jnp.int32(n_out),
+        eb_abs=jnp.float32(eb_abs), shape=shape,
+        dtype_name=_DTYPE_NAMES[dtcode])
+    cfg = FZConfig(eb=0.0, eb_mode="abs",
+                   code_mode="zigzag" if flags & FLAG_ZIGZAG else "sign_mag",
+                   exact_outliers=bool(flags & FLAG_OUTLIERS),
+                   use_kernels=False)
+    return c, cfg
+
+
+def _from_legacy_bytes(raw: memoryview, *, capacity: int | None,
+                       outlier_capacity: int | None,
+                       tier: str | None) -> tuple[FZCompressed, FZConfig]:
+    """Parse the headerless pre-v1 checkpoint stream (ckpt/checkpoint.py
+    before the container format was versioned): i64 [n, nnz, n_outliers],
+    f32 eb_abs, u32 bitflags, u16 payload rows, i32 outlier idx + val."""
+    if len(raw) < _LEGACY_HDR_BYTES:
+        raise FZFormatError(f"not an FZ container: {len(raw)} bytes, no magic")
+    n, nnz, n_out = (int(v) for v in np.frombuffer(raw, "<i8", 3, 0))
+    eb_abs = float(np.frombuffer(raw, "<f4", 1, 24)[0])
+    if n <= 0 or nnz < 0 or n_out < 0:
+        raise FZFormatError("not an FZ container: no magic and implausible "
+                            "legacy header")
+    fw = enc.flag_words(FZConfig.n_blocks(n))
+    expect = _LEGACY_HDR_BYTES + 4 * fw + enc.BLOCK_BYTES * nnz + 8 * n_out
+    if len(raw) != expect:
+        raise FZFormatError(
+            f"not an FZ container: no magic and legacy stream length "
+            f"mismatch ({len(raw)} bytes, expected {expect})")
+    off = _LEGACY_HDR_BYTES
+    bitflags = np.frombuffer(raw, "<u4", fw, off).copy()
+    off += 4 * fw
+    rows = np.frombuffer(raw, "<u2", enc.BLOCK_WORDS * nnz, off
+                         ).reshape(nnz, enc.BLOCK_WORDS)
+    off += enc.BLOCK_BYTES * nnz
+    oidx = np.frombuffer(raw, "<i4", n_out, off)
+    off += 4 * n_out
+    oval = np.frombuffer(raw, "<i4", n_out, off)
+
+    cap = max(nnz, 1) if capacity is None else capacity
+    payload = np.zeros((cap, enc.BLOCK_WORDS), np.uint16)
+    payload[:nnz] = rows
+    ocap = max(n_out, 1) if outlier_capacity is None else outlier_capacity
+    oi = np.full((ocap,), n, np.int32)
+    oi[:n_out] = oidx
+    ov = np.zeros((ocap,), np.int32)
+    ov[:n_out] = oval
+    obs.counter("entropy_stage", op="decode", selected="false",
+                tier=tier or "adhoc").inc()
+    c = FZCompressed(
+        bitflags=jnp.asarray(bitflags), payload=jnp.asarray(payload),
+        nnz_blocks=jnp.int32(nnz), outlier_idx=jnp.asarray(oi),
+        outlier_val=jnp.asarray(ov), n_outliers=jnp.int32(n_out),
+        eb_abs=jnp.float32(eb_abs), shape=(n,), dtype_name="float32")
+    return c, FZConfig(eb=0.0, eb_mode="abs", exact_outliers=True,
+                       use_kernels=False)
+
+
+def decompress_bytes(raw: bytes, *, tier: str | None = None) -> jax.Array:
+    """One-call reconstruction from a serialized container (any supported
+    version): parse, entropy-decode if flagged, run the jitted inverse
+    pipeline. The decode routes transparently — callers never inspect the
+    entropy flag themselves."""
+    c, cfg = from_bytes(raw, tier=tier)
+    return decompress(c, cfg)

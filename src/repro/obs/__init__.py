@@ -49,10 +49,22 @@ What each sentinel means
     hook every step.
   * ``sentinel_ratio_drift{tier=...}`` — the achieved compression ratio
     moved more than ``ratio_drift_factor``x from its EWMA for a tier
-    (``wire`` gradient hops / ``kv_cold`` parked pages / ``ckpt``
+    (``wire`` gradient hops / ``kv_cold`` parked pages /
+    ``kv_cold_entropy`` entropy-coded parked blobs / ``ckpt``
     checkpoints). A flag, not a failure: it usually means the data
     distribution changed (warmup gradients, new workload), but a sudden
     drift is the first symptom of a mis-resolved bound.
+
+Cold-tier entropy counters
+--------------------------
+``fz.to_bytes`` / ``fz.from_bytes`` bump
+``entropy_stage{op=encode|decode, selected=true|false, tier=...}`` — one
+increment per serialized container, labeled with whether the probe selected
+the entropy stage and which tier asked (``kv_cold_entropy``, ``ckpt``, or
+``adhoc`` for untiered calls). The serializers deliberately do *not* feed
+the ratio EWMAs; callers sample ``note_ratio`` at their own cadence (the
+pool inside its sentinel check, the checkpointer once per save) so
+legitimate per-container variance cannot trip the drift sentinel.
   * ``sched_waiting / sched_running / sched_parked / sched_max_wait_steps``
     — serving queue depths and the starvation high-water (longest any
     request waited for admission), sampled every scheduler step.

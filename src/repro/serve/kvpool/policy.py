@@ -25,6 +25,12 @@ Parking a sequence (``park``) is compress-park, not drop-and-recompute: every
 raw page it holds is compressed in place and its slots returned to the free
 list; nothing about the sequence is lost, resume is a page promotion plus
 (possibly) a fresh tail allocation.
+
+The policy is agnostic to the parked representation: with
+``PoolConfig.cold_entropy`` the pool stores tiered pages as entropy-coded
+byte containers (docs/CONTAINER_FORMAT.md) instead of device-resident
+pytrees, but tier/reclaim/park all flow through the same
+``PagePool.compress_pages`` entry point and promotion is unchanged.
 """
 from __future__ import annotations
 

@@ -11,8 +11,12 @@ a host-side page table, and (when prefix sharing is on) a
 physical page is in exactly one of two states:
 
   * ``raw``        — backed by a physical slot in the slab (hot tier);
-  * ``compressed`` — held as a fixed-shape :class:`repro.core.fz.FZCompressed`
-                     container with *no* slot (cold tier); reads decompress
+  * ``compressed`` — no slot (cold tier): a fixed-shape
+                     :class:`repro.core.fz.FZCompressed` container, or — with
+                     ``PoolConfig.cold_entropy`` — the serialized
+                     entropy-coded byte container (``Page.blob``,
+                     docs/CONTAINER_FORMAT.md), which deserializes to a
+                     leaf-identical container before decode. Reads decompress
                      transiently, writes require promotion back to raw.
 
 Physical slots not backing any page are ``free``. Compressing a page frees
@@ -86,6 +90,11 @@ COMPRESSED = "compressed"
 
 PREFIX_MODES = ("radix", "copy", "off")
 
+# gap-array chunk size for entropy-coded page blobs: page payloads are small,
+# and the lockstep chunk-parallel decode runs ~chunk_bytes steps, so a small
+# chunk keeps per-read host latency bounded (core/entropy.py)
+_COLD_CHUNK = 512
+
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
@@ -123,6 +132,15 @@ class PoolConfig:
     # radix-cached pages kept past their readers (None = unbounded; the
     # scheduler releases the whole cache at end-of-trace drain)
     max_cached_pages: int | None = None
+    # entropy-coded cold tier (lossy-lossless orchestration,
+    # docs/CONTAINER_FORMAT.md): parked containers are serialized to the
+    # versioned byte format with the second-stage Huffman coder
+    # (core/entropy.py, probe-gated per container). Reads stay tier- and
+    # bit-transparent — the blob deserializes to a leaf-identical container
+    # before the same vmapped decode — at the cost of a host-side
+    # entropy decode per cold read. Hot pages and promotion are untouched:
+    # this is strictly a park-path trade of latency for ratio.
+    cold_entropy: bool = False
 
     def __post_init__(self):
         if self.seq_capacity % self.page_size:
@@ -159,6 +177,7 @@ class Page:
     page_id: int
     slot: int | None = None        # physical slot when raw
     comp: fz.FZCompressed | None = None
+    blob: bytes | None = None      # entropy-coded serialized container
     refs: int = 1
     last_write: int = 0            # scheduler step of the last write
 
@@ -275,6 +294,11 @@ class PagePool:
         self._next_page = 0
         self.eb_abs: jax.Array | None = None
         self._fzc = cfg.fz_config()
+        # the pool's fixed container capacities: blob-backed pages must
+        # deserialize to exactly these shapes to stack into vmapped decodes
+        n_flat = math.prod(self.page_shape)
+        self._page_capacity = self._fzc.payload_capacity(n_flat)
+        self._page_ocap = self._fzc.outlier_capacity(n_flat)
         # all this pool's metrics carry a per-instance label so several pools
         # in one process (tests, A/B batchers) never cross-count
         self._obs_id = f"pool{next(_pool_ids)}"
@@ -326,14 +350,20 @@ class PagePool:
 
     def compressed_used_bytes(self) -> int:
         """Each distinct container counted once, however many sequences map
-        its page (pinned in tests — sharing must not inflate this)."""
-        return sum(int(p.comp.used_bytes()) for p in self.pages.values()
-                   if p.comp is not None)
+        its page (pinned in tests — sharing must not inflate this).
+        Blob-backed pages (``cold_entropy``) cost their exact serialized
+        length — the entropy stage's ratio win shows up here."""
+        return sum(len(p.blob) if p.blob is not None
+                   else int(p.comp.used_bytes())
+                   for p in self.pages.values()
+                   if p.comp is not None or p.blob is not None)
 
     def compressed_wire_bytes(self) -> int:
-        """Capacity-sized footprint if containers sit in fixed-shape arenas."""
-        return sum(p.comp.wire_bytes() for p in self.pages.values()
-                   if p.comp is not None)
+        """Capacity-sized footprint if containers sit in fixed-shape arenas
+        (a serialized blob IS its own wire form — exact length)."""
+        return sum(len(p.blob) if p.blob is not None else p.comp.wire_bytes()
+                   for p in self.pages.values()
+                   if p.comp is not None or p.blob is not None)
 
     def used_bytes(self) -> int:
         """Raw slab in use + actual compressed payload bytes (physical —
@@ -531,12 +561,13 @@ class PagePool:
         with obs.span("kvpool.park", pages=1):
             flat = self.slots[page.slot].reshape(-1)
             self._ensure_eb(flat)
-            page.comp = fz.compress_with_eb(flat, self.eb_abs, self._fzc)
+            self._park_store(page, fz.compress_with_eb(flat, self.eb_abs,
+                                                       self._fzc))
             self.free_slots.append(page.slot)
             page.slot = None
             self._count("kvpool_compressions")
             self._count("kvpool_compress_dispatches")
-            self._sentinel_check(flat, page.comp)
+            self._sentinel_check(flat, page)
 
     def compress_pages(self, pids: list[int]) -> None:
         """Batched raw -> compressed: one vmapped FZ dispatch for the whole
@@ -555,29 +586,60 @@ class PagePool:
             batch = fz.compress_batch_with_eb(flats, self.eb_abs, self._fzc)
             for i, pid in enumerate(pids):
                 page = self.pages[pid]
-                page.comp = jax.tree.map(lambda leaf, i=i: leaf[i], batch)
+                self._park_store(page, jax.tree.map(lambda leaf, i=i: leaf[i],
+                                                    batch))
                 self.free_slots.append(page.slot)
                 page.slot = None
                 self._count("kvpool_compressions")
             self._count("kvpool_compress_dispatches")
-            self._sentinel_check(flats[0], jax.tree.map(lambda l: l[0], batch))
+            self._sentinel_check(flats[0], self.pages[pids[0]])
 
-    def _sentinel_check(self, flat: jax.Array, comp: fz.FZCompressed) -> None:
+    def _park_store(self, page: Page, comp: fz.FZCompressed) -> None:
+        """Hold a freshly-parked container in the configured cold form:
+        the fixed-shape pytree, or (``cold_entropy``) the serialized
+        entropy-coded byte container (probe-gated — incompressible pages
+        store the plain v1 stream, the header flag routes either way)."""
+        if self.cfg.cold_entropy:
+            page.blob = fz.to_bytes(comp, self._fzc, entropy="auto",
+                                    chunk_bytes=_COLD_CHUNK,
+                                    tier="kv_cold_entropy")
+            page.comp = None
+        else:
+            page.comp = comp
+
+    def _container(self, page: Page) -> fz.FZCompressed:
+        """A cold page's container, deserializing blob-backed pages at the
+        pool's fixed capacities so every cold page — blob or pytree — stacks
+        into the same vmapped decode (bit-identical by the from_bytes fill
+        contract)."""
+        if page.comp is not None:
+            return page.comp
+        c, _ = fz.from_bytes(page.blob, capacity=self._page_capacity,
+                             outlier_capacity=self._page_ocap,
+                             tier="kv_cold_entropy")
+        return c
+
+    def _sentinel_check(self, flat: jax.Array, page: Page) -> None:
         """Sampled park-time health check: transiently decompress the fresh
-        container (via the unmetered path, so dispatch accounting is not
-        perturbed), verify the error bound, and feed the achieved ratio into
-        the drift EWMA. The device sync this costs is only paid on sampled
-        parks (first, then every Nth — see obs.sentinels.CONFIG)."""
-        if not sentinels.should_check_eb("kv_cold"):
+        container *from its stored form* (unpacking the entropy blob when the
+        cold tier is entropy-coded, via the unmetered path so dispatch
+        accounting is not perturbed), verify the error bound, and feed the
+        achieved ratio into the tier's drift EWMA. The device sync this costs
+        is only paid on sampled parks (first, then every Nth — see
+        obs.sentinels.CONFIG)."""
+        tier = "kv_cold_entropy" if page.blob is not None else "kv_cold"
+        if not sentinels.should_check_eb(tier):
             return
+        comp = self._container(page)
         src = flat.astype(jnp.float32)
         rec = fz.decompress_unmetered(comp, self._fzc)
         max_err = float(jnp.max(jnp.abs(src - rec)))
         max_abs = float(jnp.max(jnp.abs(src)))
-        sentinels.check_error_bound("kv_cold", max_err, float(self.eb_abs),
+        sentinels.check_error_bound(tier, max_err, float(self.eb_abs),
                                     max_abs)
-        sentinels.note_ratio("kv_cold",
-                             comp.raw_bytes() / max(1.0, float(comp.used_bytes())))
+        stored = (len(page.blob) if page.blob is not None
+                  else float(comp.used_bytes()))
+        sentinels.note_ratio(tier, comp.raw_bytes() / max(1.0, stored))
 
     def promote_page(self, pid: int, step: int) -> bool:
         """Compressed -> raw in place (needed before a write to a *private*
@@ -591,7 +653,7 @@ class PagePool:
         data = self._decompress(page)
         slot = self.free_slots.pop()
         self.slots = _set_slot(self.slots, slot, data)
-        page.slot, page.comp, page.last_write = slot, None, step
+        page.slot, page.comp, page.blob, page.last_write = slot, None, None, step
         self.note_high_water()
         return True
 
@@ -607,11 +669,12 @@ class PagePool:
         self._count("kvpool_decompressions", len(pages))
         self._count("kvpool_decompress_dispatches")
         with obs.span("kvpool.cold_read", pages=len(pages)):
+            comps = [self._container(p) for p in pages]
             if len(pages) == 1:
-                rec = fz.decompress(pages[0].comp, self._fzc)[None]
+                rec = fz.decompress(comps[0], self._fzc)[None]
             else:
                 stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                                       *[p.comp for p in pages])
+                                       *comps)
                 rec = fz.decompress_batch(stacked, self._fzc)
             return [rec[i].reshape(self.page_shape).astype(self.slots.dtype)
                     for i in range(len(pages))]

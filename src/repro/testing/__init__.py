@@ -3,4 +3,9 @@
 ``minihypothesis`` is an API-compatible subset of ``hypothesis`` used as a
 seeded-random-search fallback so the property tier runs even in hermetic
 environments where the real wheel cannot be installed (tests/conftest.py).
+
+``docsnippets`` is the doctest-style markdown runner behind CI's docs check:
+it executes every fenced ```python block in README.md / docs/*.md so the
+documented examples cannot drift from the code (scripts/ci.sh fast tier).
 """
+from .docsnippets import extract_blocks, run_file  # noqa: F401

@@ -1,0 +1,62 @@
+"""Doctest-style runner for fenced ``python`` blocks in markdown docs.
+
+CI's fast tier executes every fenced ``python`` block in ``README.md`` and
+``docs/*.md`` (scripts/ci.sh) so the documentation examples cannot rot: a
+renamed function or changed signature breaks the build, not the reader.
+
+Rules:
+  * only blocks fenced exactly as ```` ```python ```` run — use ```` ```text
+    ````, ```` ```bash ```` or a plain fence for non-executable listings;
+  * blocks within one file share a namespace, executing top to bottom, so a
+    later snippet can build on names a previous one defined (doctest-style
+    narrative docs);
+  * any exception propagates with a filename + snippet index in the
+    traceback's synthetic filename.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.testing.docsnippets README.md docs/*.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+FENCE_RE = re.compile(r"^```python[ \t]*\r?\n(.*?)^```[ \t]*$",
+                      re.MULTILINE | re.DOTALL)
+
+
+def extract_blocks(text: str) -> list[str]:
+    """Source of every fenced ```python block, in document order."""
+    return [m.group(1) for m in FENCE_RE.finditer(text)]
+
+
+def run_file(path: str | pathlib.Path) -> int:
+    """Execute all python snippets in one markdown file (shared namespace);
+    returns how many ran."""
+    text = pathlib.Path(path).read_text()
+    ns: dict = {"__name__": f"docsnippet:{path}"}
+    blocks = extract_blocks(text)
+    for i, src in enumerate(blocks):
+        code = compile(src, f"{path}[snippet {i}]", "exec")
+        exec(code, ns)  # noqa: S102 — executing our own docs is the point
+    return len(blocks)
+
+
+def main(argv: list[str]) -> None:
+    if not argv:
+        raise SystemExit("usage: python -m repro.testing.docsnippets "
+                         "FILE.md [FILE.md ...]")
+    total = 0
+    for path in argv:
+        n = run_file(path)
+        print(f"{path}: {n} snippet(s) OK")
+        total += n
+    if total == 0:
+        raise SystemExit("no fenced python snippets found in any input")
+    print(f"docs check OK: {total} snippet(s) across {len(argv)} file(s)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

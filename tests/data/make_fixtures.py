@@ -1,0 +1,64 @@
+"""Regenerate the frozen container-format fixtures (tests/data/*.bin|*.npy).
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/data/make_fixtures.py
+
+The fixtures pin the *serialized byte format*, not just the codec logic: the
+.bin files are containers written by the format version current at generation
+time and must keep decompressing bit-exactly forever (docs/CONTAINER_FORMAT.md
+version history). Only regenerate them when intentionally revving the format,
+alongside a version bump — never to "fix" a failing test.
+
+    container_v1_plain.bin    v1, raw payload
+    container_v1_entropy.bin  v1, entropy-coded payload (forced)
+    legacy_stream.bin         pre-v1 headerless checkpoint stream
+    expected_v1.npy           reconstruction both v1 containers must produce
+    expected_legacy.npy       reconstruction the legacy stream must produce
+"""
+import pathlib
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fz
+from repro.data import make_field
+
+HERE = pathlib.Path(__file__).parent
+
+
+def main():
+    field = jnp.asarray(make_field("smooth", (16, 16, 16), seed=5))
+    cfg = fz.FZConfig(eb=1e-3, eb_mode="rel")
+    comp = fz.compress(field, cfg)
+    rec = np.asarray(fz.decompress(comp, cfg))
+
+    (HERE / "container_v1_plain.bin").write_bytes(
+        fz.to_bytes(comp, cfg, entropy=False))
+    (HERE / "container_v1_entropy.bin").write_bytes(
+        fz.to_bytes(comp, cfg, entropy=True))
+    np.save(HERE / "expected_v1.npy", rec)
+
+    # legacy pre-v1 stream: the exact layout ckpt/checkpoint.py wrote before
+    # the format was versioned (flat f32, exact outliers always present)
+    lcfg = fz.FZConfig(eb=1e-4, eb_mode="rel", exact_outliers=True)
+    lcomp = fz.compress(field.reshape(-1), lcfg)
+    nnz, n_out = int(lcomp.nnz_blocks), int(lcomp.n_outliers)
+    legacy = b"".join([
+        np.asarray([lcomp.n, nnz, n_out], "<i8").tobytes(),
+        struct.pack("<f", float(lcomp.eb_abs)),
+        np.asarray(lcomp.bitflags).astype("<u4").tobytes(),
+        np.asarray(lcomp.payload)[:nnz].astype("<u2").tobytes(),
+        np.asarray(lcomp.outlier_idx)[:n_out].astype("<i4").tobytes(),
+        np.asarray(lcomp.outlier_val)[:n_out].astype("<i4").tobytes(),
+    ])
+    (HERE / "legacy_stream.bin").write_bytes(legacy)
+    np.save(HERE / "expected_legacy.npy",
+            np.asarray(fz.decompress(lcomp, lcfg)))
+    for p in sorted(HERE.glob("*.bin")) + sorted(HERE.glob("*.npy")):
+        print(f"{p.name}: {p.stat().st_size} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Unit tests for the cold-tier entropy coder (core/entropy.py).
+
+Pins: bit-exact roundtrip across sizes/chunkings/distributions, the exact
+size model behind the skip probe (``plan`` == actual blob size), the code
+length limit, canonical-code invariants (Kraft inequality, prefix-freeness),
+and the corruption errors block-parallel decode must surface.
+"""
+import numpy as np
+import pytest
+
+from repro.core import entropy as ent
+
+
+def _buf(kind: str, n: int, seed: int = 0) -> bytes:
+    rng = np.random.default_rng(seed)
+    if kind == "skew":
+        return np.minimum(rng.geometric(0.2, n) - 1, 255).astype(np.uint8).tobytes()
+    if kind == "uniform":
+        return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+    if kind == "const":
+        return bytes(n)
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("n", [0, 1, 5, 255, 4096, 40000])
+@pytest.mark.parametrize("chunk", [1, 7, 512, ent.DEFAULT_CHUNK])
+@pytest.mark.parametrize("kind", ["skew", "uniform", "const"])
+def test_roundtrip(n, chunk, kind):
+    data = _buf(kind, n)
+    blob = ent.encode(data, chunk)
+    assert ent.decode(blob) == data
+
+
+@pytest.mark.parametrize("kind", ["skew", "uniform", "const"])
+def test_plan_size_is_exact(kind):
+    """The probe's size estimate must be the byte-exact blob size — that is
+    what makes the auto-selection gate in fz.to_bytes trustworthy."""
+    data = _buf(kind, 10_000, seed=3)
+    counts = np.bincount(np.frombuffer(data, np.uint8), minlength=256)
+    lengths, est = ent.plan(counts, len(data), 512)
+    assert est == len(ent.encode(data, 512, lengths=lengths))
+
+
+def test_code_length_limit():
+    # Fibonacci-like counts force maximally skewed Huffman depths; the
+    # count-halving limiter must cap them at MAX_CODE_LEN for the flat
+    # 2^M decode table to stay small
+    counts = np.zeros(256, np.int64)
+    a, b = 1, 1
+    for i in range(40):
+        counts[i] = a
+        a, b = b, a + b
+    lengths = ent.limit_code_lengths(counts, ent.MAX_CODE_LEN)
+    used = lengths[counts > 0]
+    assert used.max() <= ent.MAX_CODE_LEN
+    # Kraft inequality: the limited lengths still describe a prefix code
+    assert np.sum(np.where(lengths > 0, 2.0 ** -lengths.astype(float), 0)) <= 1 + 1e-12
+    data = np.repeat(np.arange(40, dtype=np.uint8), 50).tobytes()
+    blob = ent.encode(data, 512)
+    assert ent.decode(blob) == data
+
+
+def test_canonical_codes_are_prefix_free():
+    counts = np.bincount(np.frombuffer(_buf("skew", 5000, 7), np.uint8),
+                         minlength=256)
+    lengths = ent.limit_code_lengths(counts, ent.MAX_CODE_LEN)
+    codes = ent.canonical_codes(lengths)
+    seen = set()
+    for sym in np.nonzero(lengths)[0]:
+        bits = format(codes[sym], f"0{lengths[sym]}b")
+        for p in seen:
+            assert not bits.startswith(p) and not p.startswith(bits)
+        seen.add(bits)
+
+
+def test_compresses_skewed_data():
+    data = _buf("skew", 1 << 16, seed=1)
+    blob = ent.encode(data)
+    assert len(blob) < len(data)
+    # overhead accounting: the blob is header + lengths + gaps + bitstream
+    n_chunks = -(-len(data) // ent.DEFAULT_CHUNK)
+    assert len(blob) >= ent.overhead_bytes(n_chunks)
+
+
+def test_truncated_blob_raises():
+    blob = ent.encode(_buf("skew", 4096, 2), 512)
+    with pytest.raises(ent.EntropyError):
+        ent.decode(blob[:-8])
+
+
+def test_corrupt_bitstream_raises():
+    blob = bytearray(ent.encode(_buf("skew", 4096, 4), 512))
+    blob[-1] ^= 0xFF  # flip tail bits: chunk-boundary check must catch it
+    with pytest.raises(ent.EntropyError):
+        ent.decode(bytes(blob))
+
+
+def test_encode_rejects_bad_chunk():
+    with pytest.raises(ValueError):
+        ent.encode(b"abc", 0)
