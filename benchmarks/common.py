@@ -11,17 +11,22 @@ from repro.core import fz
 
 PAPER_EBS = (1e-2, 5e-3, 1e-3, 5e-4, 1e-4)  # the paper's relative bounds
 
-FZ_PATHS = ("reference", "staged", "fused")  # the three execution paths
+FZ_PATHS = ("reference", "staged", "fused")  # the three static execution paths
 
 
 def fz_path_config(path: str, eb: float) -> fz.FZConfig:
     """One FZConfig per execution path (core/fz.py module docstring), shared
-    by every benchmark so the path matrix can't silently diverge."""
+    by every benchmark so the path matrix can't silently diverge. "auto" is
+    the tuned-dispatch path: use_kernels on, resolution via repro.tune."""
+    if path == "auto":
+        return fz.FZConfig(eb=eb, exact_outliers=False, use_kernels=True,
+                           kernel_mode="auto")
     if path not in FZ_PATHS:
-        raise ValueError(f"unknown FZ path {path!r}; choose from {FZ_PATHS}")
+        raise ValueError(f"unknown FZ path {path!r}; choose from "
+                         f"{FZ_PATHS + ('auto',)}")
     return fz.FZConfig(eb=eb, exact_outliers=False,
                        use_kernels=path != "reference",
-                       kernel_mode=path if path != "reference" else "fused")
+                       kernel_mode=path if path != "reference" else "staged")
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -163,6 +163,23 @@ def main():
     print(f"telemetry: {fz_decomp} fz decompress dispatches == pool "
           f"accounting; entropy stage on {n_sel} parked containers "
           f"({n_skip} probe-skipped); 0 sentinel violations")
+    if args.kernels:
+        # tuned dispatch: with use_kernels on, the pool's kernel_mode="auto"
+        # FZ entries and the engine's decode-attention choice must have
+        # resolved through the repro.tune registry (cached winner or the
+        # backend-aware fallback) — never a hardcoded path
+        tuned = {k: v for k, v in snap["counters"].items()
+                 if k.startswith(("tune_cache{", "tune_selected{"))
+                 and "site=dispatch" in k}
+        assert tuned, "kernels smoke never dispatched through repro.tune"
+        assert any(k.startswith("tune_selected{") and "op=decode_attention" in k
+                   for k in tuned), \
+            "decode attention never resolved through repro.tune"
+        assert any(k.startswith("tune_selected{") and "op=fz." in k
+                   for k in tuned), \
+            "FZ kernel_mode=auto never resolved through repro.tune"
+        print(f"tuned dispatch: {sum(tuned.values())} repro.tune "
+              f"resolutions across {len(tuned)} counter keys")
     obs_cli.finish(args, metadata={"arch": cfg.arch_id,
                                    "mode": "serve-prefix-shared"})
 

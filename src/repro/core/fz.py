@@ -15,8 +15,8 @@ Three execution paths, selected by ``FZConfig.use_kernels`` /
     (fused quant kernel, fused shuffle+flag kernel, XLA ``cumsum``/``nonzero``
     phase-2 epilogue); the u16 code stream round-trips HBM between launches.
     Retained as a second oracle next to the reference;
-  * ``use_kernels=True, kernel_mode="fused"`` (the kernel default) — one
-    compress megakernel and one decompress megakernel
+  * ``use_kernels=True, kernel_mode="fused"`` — one compress megakernel and
+    one decompress megakernel
     (kernels/fused_compress.py, kernels/fused_decode.py): quant + Lorenzo +
     bitshuffle + flagging + phase-2 compaction in a single launch (and the
     full inverse pipeline in another), with the code stream, shuffled words
@@ -27,6 +27,20 @@ Three execution paths, selected by ``FZConfig.use_kernels`` /
 
 All three produce bit-identical containers and reconstructions (pinned by
 the three-way property suite in tests/test_fz_properties.py).
+
+``kernel_mode="auto"`` (the default) resolves to one of the concrete paths
+per workload via :mod:`repro.tune`: the persistently cached, parity-gated
+winner of an empirical sweep when one exists for this
+``(backend, op, shape-bucket, dtype, arch)``, else a **backend-aware static
+fallback ordering**. The ordering matters and is deliberate: under the
+Pallas interpreter (every non-TPU backend today) the fused megakernels'
+sequential grid executes in Python and ``BENCH_ci.json`` measures fused
+compress ~4x *slower* than staged — so interpret-class backends fall back
+staged-before-fused, while TPU keeps fused-first (single launch, no HBM
+round-trip for the code stream). Resolution happens in the *eager* public
+wrappers before the jitted inner is entered, so every jit cache key is a
+concrete resolved config — a later cache update can never leave a stale
+"auto" trace behind.
 
 Telemetry: the public entry points are thin eager wrappers over the jitted
 pipelines. When called eagerly they bump ``fz_dispatches{op=...}`` counters
@@ -69,10 +83,10 @@ class FZConfig:
     outlier_frac: float = 1 / 256  # exact-outlier side-channel capacity fraction
     exact_outliers: bool = True    # strict error bound (beyond-paper); False = paper-faithful
     use_kernels: bool = False      # route hot stages through Pallas kernels
-    kernel_mode: str = "fused"     # "fused" megakernels | "staged" per-stage oracle
+    kernel_mode: str = "auto"      # "auto" tuned | "fused" megakernels | "staged"
 
     def __post_init__(self):
-        if self.kernel_mode not in ("fused", "staged"):
+        if self.kernel_mode not in ("auto", "fused", "staged"):
             raise ValueError(f"unknown kernel_mode {self.kernel_mode!r}")
 
     def payload_capacity(self, n: int) -> int:
@@ -149,6 +163,36 @@ def _fused(cfg: FZConfig) -> bool:
     return cfg.use_kernels and cfg.kernel_mode == "fused"
 
 
+def _resolved(cfg: FZConfig, direction: str, n: int, dtype_name: str) -> FZConfig:
+    """Resolve ``kernel_mode="auto"`` to a concrete execution path.
+
+    Called by every eager public entry point *before* the jitted inner, so
+    jit caches key on the resolved config. The tuned winner comes from
+    :func:`repro.tune.resolve_fz` (cache hit) or its backend-aware static
+    fallback (cache miss): staged-before-fused on interpret-class backends
+    — the measured 4x fused-compress interpreter regression — fused-first
+    on TPU. See the module docstring for the full ordering rationale.
+    """
+    if not (cfg.use_kernels and cfg.kernel_mode == "auto"):
+        return cfg
+    from repro import tune
+    impl = tune.resolve_fz(direction, n, dtype_name)
+    if impl == "reference":
+        return dataclasses.replace(cfg, use_kernels=False, kernel_mode="staged")
+    return dataclasses.replace(cfg, kernel_mode=impl)
+
+
+def _static_auto(cfg: FZConfig) -> FZConfig:
+    """Last-ditch "auto" resolution for internal callers that bypass the
+    public wrappers (direct ``_*_jit`` use): static backend fallback only —
+    deterministic per backend, no cache lookup, so a jit trace keyed on an
+    "auto" config can never go stale against a cache update."""
+    if not (cfg.use_kernels and cfg.kernel_mode == "auto"):
+        return cfg
+    from repro.tune import dispatch
+    return dataclasses.replace(cfg, kernel_mode=dispatch.fz_fallback_mode())
+
+
 def _stages(cfg: FZConfig):
     """Pick reference vs staged-Pallas implementations of the hot stages.
 
@@ -202,6 +246,7 @@ def _count_dispatch(op: str, cfg: FZConfig, out: FZCompressed | None = None) -> 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _compress_jit(data: jax.Array, cfg: FZConfig) -> FZCompressed:
+    cfg = _static_auto(cfg)
     dtype_name = _source_dtype_name(data)
     data = data.astype(jnp.float32)
     eb = resolve_eb(data, cfg)
@@ -214,6 +259,7 @@ def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
     The source dtype is recorded in the container (``dtype_name``) for byte
     accounting; the quantization math itself always runs in float32.
     """
+    cfg = _resolved(cfg, "compress", int(data.size), _source_dtype_name(data))
     if not jax.core.trace_state_clean():
         return _compress_jit(data, cfg)
     with obs.span("fz.compress", n=int(data.size), path=_path(cfg)):
@@ -225,6 +271,7 @@ def compress(data: jax.Array, cfg: FZConfig) -> FZCompressed:
 @partial(jax.jit, static_argnames=("cfg",))
 def _compress_with_eb_jit(data: jax.Array, eb_abs: jax.Array,
                           cfg: FZConfig) -> FZCompressed:
+    cfg = _static_auto(cfg)
     dtype_name = _source_dtype_name(data)
     data = data.astype(jnp.float32)
     eb = jnp.maximum(jnp.asarray(eb_abs, jnp.float32), jnp.float32(1e-30))
@@ -241,6 +288,7 @@ def compress_with_eb(data: jax.Array, eb_abs: jax.Array, cfg: FZConfig) -> FZCom
     ``eb_abs`` is traced (not baked into ``cfg``), all same-shaped pages share
     a single jit trace.
     """
+    cfg = _resolved(cfg, "compress", int(data.size), _source_dtype_name(data))
     if not jax.core.trace_state_clean():
         return _compress_with_eb_jit(data, eb_abs, cfg)
     with obs.span("fz.compress", n=int(data.size), path=_path(cfg)):
@@ -275,6 +323,7 @@ def _compress_core(data: jax.Array, eb: jax.Array, cfg: FZConfig,
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _decompress_jit(c: FZCompressed, cfg: FZConfig) -> jax.Array:
+    cfg = _static_auto(cfg)
     if _fused(cfg):
         from repro.kernels import ops as kops
         return kops.fused_decompress(
@@ -293,6 +342,7 @@ def _decompress_jit(c: FZCompressed, cfg: FZConfig) -> jax.Array:
 
 def decompress(c: FZCompressed, cfg: FZConfig) -> jax.Array:
     """Inverse pipeline: decode -> bit-unshuffle -> inverse Lorenzo -> dequant."""
+    cfg = _resolved(cfg, "decompress", c.n, c.dtype_name)
     if not jax.core.trace_state_clean():
         return _decompress_jit(c, cfg)
     with obs.span("fz.decompress", n=c.n, path=_path(cfg)):
@@ -305,7 +355,7 @@ def decompress_unmetered(c: FZCompressed, cfg: FZConfig) -> jax.Array:
     """``decompress`` without dispatch counting/spans — for the error-bound
     sentinels' sampled roundtrip checks, which must not perturb the dispatch
     accounting they audit (same compiled program, bit-identical output)."""
-    return _decompress_jit(c, cfg)
+    return _decompress_jit(c, _resolved(cfg, "decompress", c.n, c.dtype_name))
 
 
 def roundtrip(data: jax.Array, cfg: FZConfig):
@@ -320,6 +370,7 @@ def roundtrip(data: jax.Array, cfg: FZConfig):
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _compress_batch_jit(pages_flat, eb_abs, cfg: FZConfig):
+    cfg = _static_auto(cfg)
     return jax.vmap(lambda d: _compress_with_eb_jit(d, eb_abs, cfg))(pages_flat)
 
 
@@ -329,6 +380,8 @@ def compress_batch_with_eb(pages_flat: jax.Array, eb_abs: jax.Array,
     whole set. Elementwise math at a shared traced bound — each row is
     bit-identical to a single-row ``compress_with_eb`` call. This is the
     kvpool cold tier's batched park path."""
+    cfg = _resolved(cfg, "compress", int(pages_flat.size // pages_flat.shape[0]),
+                    _source_dtype_name(pages_flat))
     if not jax.core.trace_state_clean():
         return _compress_batch_jit(pages_flat, eb_abs, cfg)
     with obs.span("fz.compress_batch", rows=int(pages_flat.shape[0]),
@@ -341,12 +394,14 @@ def compress_batch_with_eb(pages_flat: jax.Array, eb_abs: jax.Array,
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _decompress_batch_jit(comp: FZCompressed, cfg: FZConfig):
+    cfg = _static_auto(cfg)
     return jax.vmap(lambda c: _decompress_jit(c, cfg))(comp)
 
 
 def decompress_batch(comp: FZCompressed, cfg: FZConfig) -> jax.Array:
     """vmap ``decompress`` over a leaf-stacked container batch (one counted
     dispatch) — the kvpool's batched transient cold read."""
+    cfg = _resolved(cfg, "decompress", comp.n, comp.dtype_name)
     if not jax.core.trace_state_clean():
         return _decompress_batch_jit(comp, cfg)
     with obs.span("fz.decompress_batch", rows=int(comp.payload.shape[0]),

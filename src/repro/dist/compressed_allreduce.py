@@ -78,7 +78,7 @@ class GradCompressionConfig:
     # config, so the bit-parity oracle relationship between them holds under
     # every kernel flavor.
     use_kernels: bool = False
-    kernel_mode: str = "fused"
+    kernel_mode: str = "auto"
 
     def fz_config(self) -> fz.FZConfig:
         # exact_outliers off: saturation error (like dropped blocks when

@@ -79,6 +79,16 @@ def flash_decode_shard(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """
     B, H, D = q.shape
     if use_kernels:
+        # tuned dispatch (repro.tune): the cached per-backend winner can
+        # override the kernel request back to the jnp partials where the
+        # oracle measured faster; untuned, the kernel path is honored.
+        # Shapes are trace-static, so the resolution is too.
+        from repro import tune
+        s_shard, kvh = k_cache.shape[1], k_cache.shape[2]
+        n_attn = tune.attn_cache_elems(s_shard, kvh, k_cache.shape[3])
+        use_kernels = tune.decode_attention_impl(
+            n_attn, str(k_cache.dtype)) == "kernel"
+    if use_kernels:
         from repro.kernels import flash_decode as _fdk  # local: mirror fz._stages
         m_local, num, den = _fdk.decode_partials(q, k_cache, v_cache, length,
                                                  shard_offset=shard_offset)

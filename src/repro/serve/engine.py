@@ -42,7 +42,7 @@ class KVCompressionConfig:
     eb_mode: str = "rel"           # "rel" (per-leaf range) | "abs"
     min_leaf_size: int = 65_536
     use_kernels: bool = False      # route FZ hot stages through Pallas kernels
-    kernel_mode: str = "fused"     # "fused" megakernels | "staged" oracle
+    kernel_mode: str = "auto"      # "auto" tuned | "fused" megakernels | "staged"
 
     def fz_config(self) -> fz.FZConfig:
         return fz.FZConfig(eb=self.eb, eb_mode=self.eb_mode,
@@ -121,6 +121,15 @@ class Engine:
         self._decode_paged = None
         if pool is not None and model.decode_paged is not None:
             uk = pool.use_kernels          # static: one trace per knob value
+            if uk:
+                # tuned dispatch: the repro.tune cached winner (or, untuned,
+                # the kernel fallback) decides whether paged decode runs the
+                # Pallas flash-decode kernel or the jnp partials — resolved
+                # here, once, so the jit below keys on the concrete choice
+                from repro import tune
+                n_attn = tune.attn_cache_elems(
+                    pool.seq_capacity, model.cfg.n_kv_heads, model.cfg.hd)
+                uk = tune.decode_attention_impl(n_attn, pool.dtype) == "kernel"
             self._decode_paged = jax.jit(
                 lambda p, pages, t: model.decode_paged(p, pages, t,
                                                        use_kernels=uk))

@@ -115,11 +115,13 @@ class PoolConfig:
     # quant/shuffle stages AND page-native decode attention — the engine's
     # serve loop then decodes via gather_pages + kernels/flash_decode instead
     # of materializing the contiguous cache (interpret mode off-TPU).
-    # kernel_mode picks the FZ flavor: "fused" single-launch megakernels
-    # (default) or "staged" per-stage kernels (the second oracle); batched
-    # vmapped dispatches stay bit-identical to single-page under both.
+    # kernel_mode picks the FZ flavor: "auto" (default; the repro.tune
+    # cached winner, else the backend-aware static fallback — see
+    # core/fz.py), "fused" single-launch megakernels, or "staged" per-stage
+    # kernels (the second oracle); batched vmapped dispatches stay
+    # bit-identical to single-page under all of them.
     use_kernels: bool = False
-    kernel_mode: str = "fused"
+    kernel_mode: str = "auto"
     exact_outliers: bool = False   # match serve.KVCompressionConfig default
     dtype: str = "bfloat16"
     # prefix sharing: "radix" shares refcounted pages (CoW on write),

@@ -1,0 +1,27 @@
+"""repro.tune — empirical kernel autotuner with a parity-gated winner cache.
+
+The registry (:mod:`registry`) names tunable ops and their per-backend
+candidate implementations; the tuner (:mod:`tuner`) micro-benchmarks the
+candidates — after statically budget-checking them against
+:mod:`repro.analysis` and parity-gating every one against the reference
+path — and persists the winner in a versioned JSON cache (:mod:`cache`);
+dispatch (:mod:`dispatch`) is the near-zero-overhead lookup the hot paths
+call when ``kernel_mode="auto"`` (the ``FZConfig``/kvpool/engine/dist
+default) resolves to a concrete execution path.
+
+Pre-tune from the command line::
+
+    python -m repro.tune --smoke          # tune the CI workload set
+    python -m repro.tune --dump           # print the cached table
+
+A faster-but-wrong candidate can never be selected: the parity gate
+(bit-identity for decode paths, the error-bound invariant for compress)
+runs before any candidate becomes eligible for timing.
+"""
+from .cache import SCHEMA_VERSION, TuneCache, cache_key, shape_bucket  # noqa: F401
+from .dispatch import (active_cache, arch, backend, configure,  # noqa: F401
+                       decode_attention_impl, fz_fallback_mode,
+                       invalidate_memo, reset, resolve_fz)
+from .impls import attn_cache_elems, fz_impl_config  # noqa: F401
+from .registry import Candidate, OpSpec  # noqa: F401
+from .tuner import TuneError, ensure_tuned, tune_op  # noqa: F401

@@ -1,0 +1,233 @@
+"""Built-in tunable ops and their candidate implementations.
+
+Three ops cover every tuned dispatch site in the tree:
+
+  * ``fz.compress``   — reference / staged / fused compressor paths.
+    Parity gate: the *error-bound invariant* — the candidate's container,
+    decoded through the reference inverse pipeline, must reconstruct every
+    element within ``eb_abs`` (plus the documented f32 rounding allowance).
+    A candidate that is fast but breaks the bound can never be selected.
+  * ``fz.decompress`` — same three paths on the inverse pipeline.
+    Parity gate: *bit-identity* against the reference decode.
+  * ``decode_attention`` — jnp oracle vs the Pallas flash-decode kernel.
+    Parity gate: max-abs tolerance (2e-4 in f32, the repo's pinned
+    kernel-vs-jnp bound; widened for bf16 outputs, which round to ~3
+    decimal digits).
+
+Contexts are deterministic (seeded by the workload size) so a tuning run is
+reproducible; they compress well (cumulative-sum fields) so the measured
+work resembles the scientific payloads the bench tier times. Candidates
+with Pallas launches also declare ``kernel_specs`` — the
+:mod:`repro.analysis` geometry the tuner statically budget-checks before
+ever measuring (configs flagged ``vmem-overflow`` are skipped, not crashed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fz
+
+from . import registry
+
+# f32 rounding allowance used by the property suite (tests/test_fz_properties)
+F32_EPS_ALLOWANCE = 2.0 ** -22
+EB = 1e-3
+ATTN_TOL_F32 = 2e-4     # pinned kernel-vs-jnp bound (tests/test_kernels.py)
+ATTN_TOL_LOWP = 4e-2    # bf16/f16 outputs round to ~8 mantissa bits
+
+_FZ_IMPLS = ("reference", "staged", "fused")
+
+
+def fz_impl_config(impl: str, eb: float = EB) -> fz.FZConfig:
+    """Concrete (non-auto) FZConfig for one execution path."""
+    return fz.FZConfig(eb=eb, exact_outliers=False,
+                       use_kernels=impl != "reference",
+                       kernel_mode=impl if impl != "reference" else "staged")
+
+
+def _fz_context(*, n: int, dtype: str) -> dict:
+    rng = np.random.default_rng(1234 + int(n))
+    x = np.cumsum(rng.standard_normal(n).astype(np.float32) * 0.01)
+    data = jnp.asarray(x).astype(dtype)
+    ref_cfg = fz_impl_config("reference")
+    container = jax.block_until_ready(fz._compress_jit(data, ref_cfg))
+    return {"n": n, "dtype": dtype, "data": data,
+            "ref_cfg": ref_cfg, "container": container}
+
+
+def _n_tiles(n: int) -> int:
+    return -(-int(n) // 4096)
+
+
+def _fz_specs(impl: str, direction: str):
+    """kernel_specs hook for one (impl, direction); None for the reference."""
+    if impl == "reference":
+        return None
+
+    def specs(ctx: dict) -> list:
+        import repro.kernels  # noqa: F401  -- registers the spec builders
+        from repro.analysis.kernelspec import spec_builders
+        b = spec_builders()
+        shape, dtype = (ctx["n"],), ctx["dtype"]
+        if direction == "compress":
+            if impl == "fused":
+                return [b["fused_compress"](shape=shape, dtype=dtype,
+                                            capacity_frac=1.0)]
+            return [b["lorenzo_quant"](shape=shape, dtype=dtype),
+                    b["bitshuffle_flag.shuffle"](n_tiles=_n_tiles(ctx["n"]))]
+        if impl == "fused":
+            return [b["fused_decode"](shape=shape, capacity_frac=1.0)]
+        return [b["bitshuffle_flag.unshuffle"](n_tiles=_n_tiles(ctx["n"]))]
+
+    return specs
+
+
+def _compress_runner(impl: str):
+    def make_runner(ctx: dict):
+        cfg = fz_impl_config(impl)
+        data = ctx["data"]
+        return lambda: fz._compress_jit(data, cfg)
+    return make_runner
+
+
+def _compress_parity(ctx: dict, out, ref_out) -> str | None:
+    """Error-bound invariant: decode through the reference inverse pipeline."""
+    x = np.asarray(jnp.asarray(ctx["data"], jnp.float32))
+    rec = np.asarray(fz._decompress_jit(out, ctx["ref_cfg"]), np.float32)
+    eb_abs = float(np.asarray(out.eb_abs))
+    err = np.abs(x - rec)
+    limit = eb_abs * (1 + 1e-6) + np.abs(x) * F32_EPS_ALLOWANCE
+    if bool((err > limit).any()):
+        return (f"error bound violated: max|x-x̂| {float(err.max()):.3g} "
+                f"> eb_abs {eb_abs:.3g}")
+    return None
+
+
+def _decompress_runner(impl: str):
+    def make_runner(ctx: dict):
+        cfg = fz_impl_config(impl)
+        c = ctx["container"]
+        return lambda: fz._decompress_jit(c, cfg)
+    return make_runner
+
+
+def _decompress_parity(ctx: dict, out, ref_out) -> str | None:
+    del ctx
+    if not np.array_equal(np.asarray(out), np.asarray(ref_out)):
+        return "decode not bit-identical to the reference inverse pipeline"
+    return None
+
+
+registry.register_op(registry.OpSpec(
+    name="fz.compress", reference="reference", make_context=_fz_context,
+    parity=_compress_parity, gate="error-bound"))
+registry.register_op(registry.OpSpec(
+    name="fz.decompress", reference="reference", make_context=_fz_context,
+    parity=_decompress_parity, gate="bit-identity"))
+
+for _impl in _FZ_IMPLS:
+    registry.register(registry.Candidate(
+        op="fz.compress", impl=_impl, make_runner=_compress_runner(_impl),
+        kernel_specs=_fz_specs(_impl, "compress")))
+    registry.register(registry.Candidate(
+        op="fz.decompress", impl=_impl, make_runner=_decompress_runner(_impl),
+        kernel_specs=_fz_specs(_impl, "decompress")))
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: jnp oracle vs the Pallas flash-decode kernel
+# ---------------------------------------------------------------------------
+
+ATTN_KVH = 2
+ATTN_D = 64
+ATTN_B = 2
+ATTN_G = 2
+
+
+def _attn_geometry(n: int) -> tuple[int, int, int, int, int]:
+    """(B, S, KVH, G, D) for a cache of ~n elements per sequence.
+
+    Dispatch sites key on ``n = S * KVH * D`` (the per-sequence cache size,
+    the axis the kernel tiles over); the remaining dims are held at a
+    representative serving geometry.
+    """
+    s = max(8, int(n) // (ATTN_KVH * ATTN_D))
+    return ATTN_B, s, ATTN_KVH, ATTN_G, ATTN_D
+
+
+def attn_cache_elems(seq_len: int, n_kv_heads: int, head_dim: int) -> int:
+    """The ``n`` a decode-attention dispatch site should tune/look up with."""
+    return int(seq_len) * int(n_kv_heads) * int(head_dim)
+
+
+def _attn_context(*, n: int, dtype: str) -> dict:
+    b, s, kvh, g, d = _attn_geometry(n)
+    k0, k1, k2 = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(k0, (b, kvh * g, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k1, (b, s, kvh, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k2, (b, s, kvh, d), jnp.float32).astype(dtype)
+    length = jnp.full((b,), s, jnp.int32)
+    return {"n": n, "dtype": dtype, "q": q, "k": k, "v": v, "length": length,
+            "geometry": (b, s, kvh, g, d)}
+
+
+def _attn_runner(impl: str):
+    def make_runner(ctx: dict):
+        q, k, v, length = ctx["q"], ctx["k"], ctx["v"], ctx["length"]
+        if impl == "jnp":
+            from repro.models import attention
+            return jax.jit(lambda: attention.decode_attention(q, k, v, length))
+        from repro.kernels import flash_decode
+        return jax.jit(lambda: flash_decode.flash_decode(q, k, v, length))
+    return make_runner
+
+
+def _attn_parity(ctx: dict, out, ref_out) -> str | None:
+    a = np.asarray(jnp.asarray(out, jnp.float32))
+    b = np.asarray(jnp.asarray(ref_out, jnp.float32))
+    tol = ATTN_TOL_F32 if ctx["dtype"] in ("float32", "float64") else ATTN_TOL_LOWP
+    diff = float(np.max(np.abs(a - b)))
+    if diff > tol:
+        return f"max|Δ| {diff:.3g} exceeds the {tol:g} kernel-parity bound"
+    return None
+
+
+def _attn_specs(ctx: dict) -> list:
+    import repro.kernels  # noqa: F401
+    from repro.analysis.kernelspec import spec_builders
+    b, s, kvh, g, d = ctx["geometry"]
+    return [spec_builders()["flash_decode"](
+        B=b, S=s, KVH=kvh, G=g, D=d, kv_tile=None,
+        point=f"tune n={ctx['n']}")]
+
+
+registry.register_op(registry.OpSpec(
+    name="decode_attention", reference="jnp", make_context=_attn_context,
+    parity=_attn_parity, gate="tolerance"))
+registry.register(registry.Candidate(
+    op="decode_attention", impl="jnp", make_runner=_attn_runner("jnp")))
+registry.register(registry.Candidate(
+    op="decode_attention", impl="kernel", make_runner=_attn_runner("kernel"),
+    kernel_specs=_attn_specs))
+
+
+def evil_candidate(op: str, impl: str = "evil") -> registry.Candidate:
+    """A fast-but-wrong candidate for parity-gate tests: returns the right
+    pytree structure with zeroed data leaves (instant, never correct)."""
+    spec = registry.op(op)
+
+    def make_runner(ctx: dict):
+        ref_impl = next(c for c in registry.candidates(op)
+                        if c.impl == spec.reference)
+        ref_out = jax.block_until_ready(ref_impl.make_runner(ctx)())
+        zeros = jax.tree.map(jnp.zeros_like, ref_out)
+        if dataclasses.is_dataclass(zeros):
+            # keep the resolved bound so the error-bound gate sees a
+            # plausible container whose *data* is wrong
+            zeros = dataclasses.replace(zeros, eb_abs=ref_out.eb_abs)
+        return lambda: zeros
+    return registry.Candidate(op=op, impl=impl, make_runner=make_runner)

@@ -1,0 +1,165 @@
+"""Empirical tuner: budget-check, parity-gate, then measure and cache.
+
+``tune_op`` is the whole contract in one function, in eligibility order:
+
+  1. **cache hit** — a valid entry for ``(backend, op, shape-bucket, dtype,
+     arch)`` short-circuits everything: zero re-measurements on a warm
+     cache (pinned by the double-run assert in ``scripts/ci.sh`` and
+     tests/test_tune.py).
+  2. **static budget skip** — candidates declaring ``kernel_specs`` are run
+     through :func:`repro.analysis.resources.analyze_spec` at the context
+     geometry; a ``vmem-overflow``/``smem-overflow`` finding skips the
+     candidate (logged + counted + recorded in the entry) instead of
+     measuring a launch the hardware cannot hold.
+  3. **parity gate** — every surviving non-reference candidate's output is
+     checked against the reference implementation (bit-identity for decode
+     paths, the error-bound invariant for compress). Rejected candidates
+     are recorded and *never eligible*, however fast they would have been.
+  4. **measurement** — warmup launches then median-of-k wall time per
+     eligible candidate, inside an ``obs.span("tune.measure", ...)`` so
+     the timings land in the metrics registry and trace exporters.
+
+The winner (min median) is written to the persistent cache and the
+in-process dispatch memo is refreshed, so subsequent ``kernel_mode="auto"``
+dispatches read it with near-zero overhead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+
+from . import registry
+from .cache import TuneCache, cache_key, shape_bucket
+
+
+class TuneError(RuntimeError):
+    """No eligible candidate survived the budget and parity gates."""
+
+
+def _budget_skip(cand: registry.Candidate, ctx: dict) -> str | None:
+    """Static resource check; returns the skip reason or None."""
+    if cand.kernel_specs is None:
+        return None
+    from repro.analysis import resources
+    for spec in cand.kernel_specs(ctx):
+        for f in resources.analyze_spec(spec):
+            if f.rule in ("vmem-overflow", "smem-overflow"):
+                return f"{f.rule} ({spec.name}): {f.message}"
+    return None
+
+
+def _measure_us(runner, *, warmup: int, k: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(runner())
+    ts = []
+    for _ in range(k):
+        t0 = time.perf_counter()
+        jax.block_until_ready(runner())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def tune_op(op_name: str, *, n: int, dtype: str,
+            cache: TuneCache | None = None, k: int = 3, warmup: int = 1,
+            force: bool = False, log=print) -> tuple[dict, bool]:
+    """Tune one op at one workload point; returns ``(entry, measured)``.
+
+    ``measured`` is False exactly when the entry came from the cache — the
+    invariant the CI double-run pins.
+    """
+    from . import dispatch
+    if cache is None:
+        cache = dispatch.active_cache()
+    backend, arch = dispatch.backend(), dispatch.arch()
+    key = cache_key(backend, op_name, n, dtype, arch)
+    hit = cache.get(key)
+    if hit is not None and not force:
+        obs.counter("tune_cache", result="hit", site="tuner").inc()
+        return hit, False
+    obs.counter("tune_cache", result="miss", site="tuner").inc()
+
+    spec = registry.op(op_name)
+    ctx = spec.make_context(n=n, dtype=dtype)
+    cands = registry.candidates(op_name, backend=backend)
+    if not any(c.impl == spec.reference for c in cands):
+        raise TuneError(f"{op_name}: reference impl {spec.reference!r} "
+                        f"not registered for backend {backend!r}")
+    ref_out = None
+    measured: dict[str, float] = {}
+    skipped: dict[str, str] = {}
+    rejected: dict[str, str] = {}
+    # reference first: every other candidate is gated against its output
+    for cand in sorted(cands, key=lambda c: c.impl != spec.reference):
+        why = _budget_skip(cand, ctx)
+        if why is not None:
+            skipped[cand.impl] = why
+            obs.counter("tune_skipped", op=op_name, impl=cand.impl).inc()
+            log(f"tune: {op_name}[{cand.impl}] n={n} skipped: {why}")
+            continue
+        runner = cand.make_runner(ctx)
+        out = jax.block_until_ready(runner())
+        if cand.impl == spec.reference:
+            ref_out = out
+        else:
+            if ref_out is None:
+                rejected[cand.impl] = "no reference output to gate against"
+                continue
+            err = spec.parity(ctx, out, ref_out)
+            if err is not None:
+                rejected[cand.impl] = err
+                obs.counter("tune_parity_rejected", op=op_name,
+                            impl=cand.impl).inc()
+                log(f"tune: {op_name}[{cand.impl}] n={n} REJECTED "
+                    f"({spec.gate} gate): {err}")
+                continue
+        with obs.span("tune.measure", op=op_name, impl=cand.impl):
+            measured[cand.impl] = _measure_us(runner, warmup=warmup, k=k)
+        obs.counter("tune_measurements", op=op_name, impl=cand.impl).inc()
+    if not measured:
+        raise TuneError(f"{op_name}: no candidate survived "
+                        f"(skipped={skipped}, rejected={rejected})")
+    winner = min(measured, key=measured.get)
+    entry = {
+        "impl": winner, "measured_us": measured, "skipped": skipped,
+        "rejected": rejected, "backend": backend, "arch": arch,
+        "op": op_name, "bucket": shape_bucket(n), "dtype": dtype,
+        "gate": spec.gate, "k": k, "warmup": warmup,
+    }
+    cache.put(key, entry)
+    cache.save()
+    dispatch.invalidate_memo()
+    obs.counter("tune_selected", op=op_name, impl=winner, site="tuner").inc()
+    pretty = ", ".join(f"{i}={measured[i]:.0f}us" for i in sorted(measured))
+    log(f"tune: {op_name} n={n} {dtype} [{backend}/{arch}] -> "
+        f"{winner} ({pretty})")
+    return entry, True
+
+
+def ensure_tuned(workloads, *, cache: TuneCache | None = None, k: int = 3,
+                 warmup: int = 1, force: bool = False, log=print) -> dict:
+    """Tune a list of ``(op, n, dtype)`` points; returns a summary dict with
+    per-point results plus hit/miss/measurement totals (what the CI tune
+    step parses)."""
+    from . import dispatch
+    if cache is None:
+        cache = dispatch.active_cache()
+    results, hits, misses, n_measured = [], 0, 0, 0
+    for op_name, n, dtype in workloads:
+        entry, measured_now = tune_op(op_name, n=n, dtype=dtype, cache=cache,
+                                      k=k, warmup=warmup, force=force, log=log)
+        hits += not measured_now
+        misses += measured_now
+        n_measured += len(entry["measured_us"]) if measured_now else 0
+        results.append({"op": op_name, "n": n, "dtype": dtype,
+                        "impl": entry["impl"], "measured": measured_now,
+                        "measured_us": entry["measured_us"],
+                        "skipped": entry["skipped"],
+                        "rejected": entry["rejected"]})
+    return {"results": results, "hits": hits, "misses": misses,
+            "measurements": n_measured, "backend": dispatch.backend(),
+            "arch": dispatch.arch(), "cache_path": str(cache.path),
+            "cache_entries": len(cache)}
